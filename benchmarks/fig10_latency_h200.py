@@ -1,0 +1,24 @@
+"""Fig. 10: H200 testbed — gains persist on stronger hardware."""
+from benchmarks.common import POLICIES, fmt_row, run_point, speedup_vs_best_baseline
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H200
+
+
+def run(quick: bool = True):
+    rows = []
+    rates = [0.2] if quick else [0.1, 0.2, 0.33, 0.5, 0.8, 1.0, 1.2]
+    n = 24 if quick else 48
+    for regime in ["ILR-1", "ILR-2", "ILR-3", "ILR-4"]:
+        for rate in rates:
+            point = []
+            for policy in POLICIES:
+                s = run_point(CONFIG, H200, policy, regime, rate, n,
+                              max_context=CONTEXT_LIMIT)
+                r = fmt_row(s)
+                r["figure"] = "fig10"
+                point.append(r)
+            sp = speedup_vs_best_baseline(point)
+            for r in point:
+                r["mars_speedup_mean"] = sp.get("speedup")
+            rows.extend(point)
+    return rows

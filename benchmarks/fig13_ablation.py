@@ -1,0 +1,21 @@
+"""Fig. 13: component ablations — external control plane, priority-aware
+coordinator, opportunistic co-scheduler."""
+from benchmarks.common import fmt_row, run_point
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H100
+
+VARIANTS = ["mars", "mars-no-ctrl", "mars-no-coord", "mars-no-cosched"]
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 24 if quick else 48
+    for regime in ["ILR-1", "ILR-3"] if quick else ["ILR-1", "ILR-2", "ILR-3", "ILR-4"]:
+        for variant in VARIANTS:
+            s = run_point(CONFIG, H100, variant, regime, 0.25, n,
+                          max_context=CONTEXT_LIMIT)
+            r = fmt_row(s)
+            r["figure"] = "fig13"
+            r["policy"] = variant
+            rows.append(r)
+    return rows

@@ -1,0 +1,20 @@
+"""Fig. 2: token throughput vs Dynamic SLO-Aware Goodput (ILR-1 vs ILR-4).
+
+Baselines sustain token throughput while goodput collapses under heavier
+input-length regimes; MARS keeps request completions within SLO."""
+from benchmarks.common import POLICIES, fmt_row, run_point
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H100
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 24 if quick else 48
+    for regime, rate in [("ILR-1", 0.2), ("ILR-4", 0.2)]:
+        for policy in POLICIES:
+            s = run_point(CONFIG, H100, policy, regime, rate, n,
+                          max_context=CONTEXT_LIMIT)
+            r = fmt_row(s)
+            r["figure"] = "fig2"
+            rows.append(r)
+    return rows

@@ -1,0 +1,27 @@
+"""Fig. 7: mean/P90/P95 E2E latency, Qwen3-Coder-30B x H100, ILR-1..4."""
+from benchmarks.common import POLICIES, fmt_row, run_point, speedup_vs_best_baseline
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H100
+
+RATES_QUICK = [0.1, 0.33]
+RATES_FULL = [0.05, 0.1, 0.2, 0.33, 0.5]
+
+
+def run(quick: bool = True):
+    rows = []
+    rates = RATES_QUICK if quick else RATES_FULL
+    n = 24 if quick else 48
+    for regime in ["ILR-1", "ILR-2", "ILR-3", "ILR-4"]:
+        for rate in rates:
+            point = []
+            for policy in POLICIES:
+                s = run_point(CONFIG, H100, policy, regime, rate, n,
+                              max_context=CONTEXT_LIMIT)
+                r = fmt_row(s)
+                r["figure"] = "fig7"
+                point.append(r)
+            sp = speedup_vs_best_baseline(point)
+            for r in point:
+                r["mars_speedup_mean"] = sp.get("speedup")
+            rows.extend(point)
+    return rows

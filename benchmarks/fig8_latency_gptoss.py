@@ -1,0 +1,23 @@
+"""Fig. 8: GPT-OSS-120B x H100, S-ILR1..3 (131K context cap)."""
+from benchmarks.common import POLICIES, fmt_row, run_point, speedup_vs_best_baseline
+from repro.configs.gpt_oss_120b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H100
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 20 if quick else 40
+    pols = POLICIES
+    for regime in ["S-ILR1", "S-ILR2", "S-ILR3"]:
+        point = []
+        for policy in pols:
+            s = run_point(CONFIG, H100, policy, regime, 0.25, n,
+                          max_context=CONTEXT_LIMIT)
+            r = fmt_row(s)
+            r["figure"] = "fig8"
+            point.append(r)
+        sp = speedup_vs_best_baseline(point)
+        for r in point:
+            r["mars_speedup_mean"] = sp.get("speedup")
+        rows.extend(point)
+    return rows

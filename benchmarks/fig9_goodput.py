@@ -1,0 +1,18 @@
+"""Fig. 9: Dynamic SLO-aware goodput, alpha in {1,2,3}, ILR-1..4."""
+from benchmarks.common import POLICIES, run_point
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H100
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 24 if quick else 48
+    for regime in ["ILR-1", "ILR-2", "ILR-3", "ILR-4"]:
+        for policy in POLICIES:
+            s = run_point(CONFIG, H100, policy, regime, 0.1, n,
+                          max_context=CONTEXT_LIMIT)
+            rows.append({
+                "figure": "fig9", "policy": policy, "regime": regime,
+                **{f"goodput_a{int(a)}": round(g, 5)
+                   for a, g in s["goodput"].items()}})
+    return rows

@@ -1,0 +1,47 @@
+"""Kernel micro-bench: us/call for the Pallas kernels (interpret mode on
+CPU; on-TPU numbers are the target) vs the jnp oracles."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, Hq, Hkv, S, D = 1, 8, 2, 256, 64
+    q = jax.random.normal(key, (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(key, (B, Hkv, S, D), jnp.float32)
+    rows.append({"figure": "kernels", "name": "flash_attention_interp",
+                 "us_per_call": round(_time(
+                     lambda: ops.attention(q, k, k, use_kernel=True)), 1)})
+    rows.append({"figure": "kernels", "name": "attention_oracle",
+                 "us_per_call": round(_time(
+                     lambda: ops.attention(q, k, k, use_kernel=False)), 1)})
+    qd = jax.random.normal(key, (4, Hq, D), jnp.float32)
+    kp = jax.random.normal(key, (32, 32, Hkv, D), jnp.float32)
+    tbl = jnp.zeros((4, 4), jnp.int32)
+    lens = jnp.full((4,), 100, jnp.int32)
+    rows.append({"figure": "kernels", "name": "paged_attention_interp",
+                 "us_per_call": round(_time(
+                     lambda: ops.decode_attention(qd, kp, kp, tbl, lens,
+                                                  use_kernel=True)), 1)})
+    r_ = jax.random.normal(key, (1, 64, 2, 32), jnp.float32) * 0.3
+    w = jnp.full((1, 64, 2, 32), 0.9, jnp.float32)
+    u = jnp.zeros((2, 32), jnp.float32)
+    s0 = jnp.zeros((1, 2, 32, 32), jnp.float32)
+    rows.append({"figure": "kernels", "name": "wkv6_interp",
+                 "us_per_call": round(_time(
+                     lambda: ops.wkv(r_, r_, r_, w, u, s0, use_kernel=True)), 1)})
+    return rows

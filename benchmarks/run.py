@@ -1,0 +1,62 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV summary lines plus per-figure tables.
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+
+FIGURES = [
+    "fig2_goodput_collapse",
+    "fig3_kv_dynamics",
+    "fig7_latency_h100",
+    "fig8_latency_gptoss",
+    "fig9_goodput",
+    "fig10_latency_h200",
+    "fig11_agent_loop",
+    "fig13_ablation",
+    "kernel_bench",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow); default is quick mode")
+    ap.add_argument("--only", default=None, help="comma-separated figure list")
+    ap.add_argument("--out", default="bench_results.json")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    figures = args.only.split(",") if args.only else FIGURES
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for fig in figures:
+        mod = importlib.import_module(f"benchmarks.{fig}")
+        t0 = time.time()
+        rows = mod.run(quick=quick)
+        dt = time.time() - t0
+        all_rows.extend(rows)
+        derived = ""
+        mars_rows = [r for r in rows if r.get("policy") == "mars"
+                     and r.get("mars_speedup_mean")]
+        if mars_rows:
+            sp = [r["mars_speedup_mean"] for r in mars_rows]
+            derived = f"mars_speedup_mean={min(sp)}x..{max(sp)}x"
+        elif rows and "us_per_call" in rows[0]:
+            derived = ";".join(f"{r['name']}={r['us_per_call']}us"
+                               for r in rows)
+        print(f"{fig},{dt*1e6/max(1,len(rows)):.0f},{derived}")
+        for r in rows:
+            clean = {k: v for k, v in r.items() if k != "engine"}
+            print("  " + json.dumps(clean))
+    with open(args.out, "w") as f:
+        json.dump([{k: v for k, v in r.items() if k != "engine"}
+                   for r in all_rows], f, indent=1)
+    print(f"[benchmarks] wrote {args.out} ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

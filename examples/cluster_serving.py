@@ -1,0 +1,93 @@
+"""Fleet-scale serving: the cluster router (paper §7 scale-out path) driving
+many simulated engine replicas with failures, stragglers, and elastic join.
+Demonstrates the 1000+ node control-plane story on this host.
+
+    PYTHONPATH=src python examples/cluster_serving.py [--replicas 64]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.core.goodput import LatencyStats
+from repro.distributed.router import ClusterRouter, RouterConfig
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig
+from repro.models.perf_model import H100, kv_cache_bytes
+from repro.workloads.generator import WorkloadSpec, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=16)
+    ap.add_argument("--sessions", type=int, default=96)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--kill", type=int, default=2,
+                    help="replicas to fail mid-run")
+    args = ap.parse_args()
+
+    backend = SimBackend(CONFIG, H100)
+    blocks = int((H100.hbm_bytes - 2.1 * CONFIG.param_count())
+                 / kv_cache_bytes(CONFIG, 1) / 32)
+    router = ClusterRouter(RouterConfig(heartbeat_timeout=15.0))
+    engines = {}
+    for i in range(args.replicas):
+        rid = f"replica-{i}"
+        engines[rid] = Engine(EngineConfig(total_kv_blocks=blocks,
+                                           cpu_slots=16), "mars", backend)
+        router.register(rid, engines[rid], now=0.0)
+
+    spec = WorkloadSpec(regime="ILR-1", arrival_rate=args.rate,
+                        n_sessions=args.sessions, seed=0,
+                        max_context=CONTEXT_LIMIT)
+    arrivals = sorted(generate(spec, CONFIG, H100),
+                      key=lambda s: s.arrival_time)
+    rng = np.random.default_rng(0)
+    dead = set(rng.choice(args.replicas, args.kill, replace=False))
+
+    now, i, killed = 0.0, 0, False
+    for step in range(300_000):
+        while i < len(arrivals) and arrivals[i].arrival_time <= now:
+            router.place(arrivals[i], now=now)
+            i += 1
+        if not killed and now > 60.0:           # mid-run failure injection
+            killed = True
+            print(f"[t={now:.0f}s] killing {sorted(dead)}")
+        progressed = False
+        max_el = 0.0
+        for idx, (rid, eng) in enumerate(engines.items()):
+            if killed and idx in dead:
+                continue                         # failed: no ticks, no beats
+            el, prog = eng.tick(now)
+            progressed |= prog or el > 0
+            max_el = max(max_el, el)
+            router.heartbeat(rid, kv_utilization=eng.telem.kv_utilization,
+                             tool_backlog=eng.tools.backlog,
+                             active_sessions=len(eng.active),
+                             step_latency=max(el, 1e-3), now=now)
+        router.check_failures(now=now)
+        router.update_stragglers(now=now)
+        router.dispatch_requeued(now=now)
+        alive = [e for idx, (rid, e) in enumerate(engines.items())
+                 if not (killed and idx in dead)]
+        if i >= len(arrivals) and all(e.done() for e in alive) \
+                and not router.requeued:
+            break
+        now += max(max_el, 0.25) if progressed else 2.0
+
+    finished = [s for idx, (rid, e) in enumerate(engines.items())
+                if not (killed and idx in dead) for s in e.finished]
+    lat = LatencyStats.of([s.e2e_latency for s in finished])
+    fail_evs = [e for e in router.events if e["ev"] == "failed"]
+    print(f"\nfleet: {args.replicas} replicas ({args.kill} failed mid-run), "
+          f"{len(finished)}/{args.sessions} sessions completed")
+    print(f"latency mean {lat.mean:.1f}s p95 {lat.p95:.1f}s; "
+          f"router events: {len(fail_evs)} failures detected, "
+          f"{sum(1 for e in router.events if e['ev']=='straggler_drain')} drains")
+
+
+if __name__ == "__main__":
+    main()

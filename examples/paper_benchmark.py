@@ -1,0 +1,44 @@
+"""Reproduce a paper operating point: Qwen3-Coder-30B x H100, ILR-2, all six
+scheduling policies on the discrete-event backend (paper testbed analogue).
+
+    PYTHONPATH=src python examples/paper_benchmark.py [--rate 0.25]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.common import POLICIES, fmt_row, run_point, \
+    speedup_vs_best_baseline
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.models.perf_model import H100
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=0.25)
+    ap.add_argument("--regime", default="ILR-2")
+    ap.add_argument("--sessions", type=int, default=24)
+    args = ap.parse_args()
+
+    rows = []
+    print(f"{args.regime} @ {args.rate} req/s, {args.sessions} sessions, "
+          f"Qwen3-Coder-30B on H100:\n")
+    print(f"{'policy':14s} {'mean':>8s} {'p90':>8s} {'p95':>8s} "
+          f"{'ttft_p95':>9s} {'goodput':>9s}")
+    for policy in POLICIES:
+        s = run_point(CONFIG, H100, policy, args.regime, args.rate,
+                      args.sessions, max_context=CONTEXT_LIMIT)
+        r = fmt_row(s)
+        rows.append(r)
+        print(f"{policy:14s} {r['mean_s']:8.1f} {r['p90_s']:8.1f} "
+              f"{r['p95_s']:8.1f} {r['ttft_p95_s']:9.2f} "
+              f"{r['goodput3_req_s']:9.5f}")
+    sp = speedup_vs_best_baseline(rows)
+    print(f"\nMARS vs best baseline ({sp['best_baseline_policy']}): "
+          f"{sp['speedup']}x mean-latency")
+
+
+if __name__ == "__main__":
+    main()

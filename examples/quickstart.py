@@ -1,0 +1,62 @@
+"""Quickstart: serve a small model with batched agentic requests through the
+MARS engine on this host (real jit'd prefill/decode + real tool threads).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.events import EventBus
+from repro.core.session import Round, make_session
+from repro.engine.engine import Engine, EngineConfig, run_live
+from repro.engine.jax_runner import JaxBackend
+from repro.engine.tools import RealToolExecutor
+
+
+def main():
+    cfg = get_config("llama3.2-1b").reduced()
+    print(f"model: {cfg.name} ({cfg.param_count():,} params, reduced)")
+    backend = JaxBackend(cfg, max_slots=4, max_len=512)
+    print(f"calibrated oracle: prefill {backend.prefill_rate():.0f} tok/s, "
+          f"decode step {backend._decode_s_per_step*1e3:.1f} ms")
+
+    bus = EventBus()
+    tools = RealToolExecutor(cpu_slots=2, bus=bus)
+    engine = Engine(
+        EngineConfig(total_kv_blocks=4 * 511 // 32, block_size=32,
+                     token_budget=256, max_decode_batch=4,
+                     decode_granularity=4, cpu_slots=2),
+        "mars", backend, bus=bus, tool_exec=tools)
+
+    rng = np.random.default_rng(0)
+    sessions = []
+    for i in range(4):
+        rounds = [
+            Round(int(rng.integers(80, 200)), 16, "terminal", 0.3),
+            Round(48, 12, "file_editor", 0.15),
+            Round(32, 8, None, 0.0),
+        ]
+        sessions.append(make_session(0.1 * i, rounds, ideal_time=1.0))
+
+    t0 = time.time()
+    finished, _ = run_live(engine, sessions, timeout=120)
+    tools.shutdown()
+    print(f"\nserved {len(finished)} multi-round sessions in "
+          f"{time.time()-t0:.1f}s:")
+    for s in finished:
+        print(f"  session {s.sid}: {len(s.rounds)} rounds, "
+              f"{len(s.meta['generated'])} tokens generated, "
+              f"e2e {s.e2e_latency:.2f}s, per-round TTFT "
+              f"{[f'{t:.3f}s' for t in s.ttfts]}")
+    warm = engine.bus.counts.get("unpin", 0)
+    print(f"\nunified-info-stream event counts: { {k: v for k, v in sorted(engine.bus.counts.items())} }")
+    print(f"warm resumptions (KV retained across tools): {warm}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Train a ~100M-param llama-family model for a few hundred steps with
+checkpoint/restart, on this host.
+
+    PYTHONPATH=src python examples/train_smoke.py [--steps 200]
+"""
+import argparse
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    args = ap.parse_args()
+
+    # ~100M-param reduced llama3 (vocab dominates at this scale)
+    cfg = get_config("llama3.2-1b").reduced(
+        d_model=args.d_model, n_layers=args.layers, n_heads=8, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=64_000)
+    print(f"training {cfg.name}: {cfg.param_count():,} params")
+
+    ckpt_dir = tempfile.mkdtemp(prefix="mars_train_")
+    t0 = time.time()
+    # monkey-patch the arch lookup so train() uses our custom reduction
+    import repro.launch.train as T
+    orig = T.get_config
+    T.get_config = lambda a: type("X", (), {"reduced": lambda self=None: cfg})()
+    try:
+        losses, _ = train("custom", reduced=True, steps=args.steps,
+                          seq_len=256, batch=8, ckpt_dir=ckpt_dir,
+                          ckpt_every=50, log_every=20)
+    finally:
+        T.get_config = orig
+    dt = time.time() - t0
+    toks = args.steps * 8 * 256
+    print(f"\n{args.steps} steps ({toks:,} tokens) in {dt:.0f}s "
+          f"({toks/dt:.0f} tok/s); loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Assigned input-shape set (identical across the 10 LM-family archs).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of ``seq_len``); ``train_4k`` lowers ``train_step``; ``prefill_32k``
+lowers the serving prefill step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SHAPE_NAMES: Tuple[str, ...] = tuple(SHAPES)
+
+
+def shape(name: str) -> ShapeSpec:
+    return SHAPES[name]

@@ -1,0 +1,12 @@
+"""MARS core: unified info stream, external control plane (AIMD admission +
+pressure-aware queue packing), internal agent-centric scheduler (windowed
+MLFQ + opportunistic co-scheduler), and the baseline policies."""
+
+from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
+from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler
+from repro.core.events import Event, EventBus
+from repro.core.mlfq import MLFQConfig, PriorityCoordinator
+from repro.core.policies import (KVAction, MARSConfig, MARSPolicy, Policy,
+                                 make_policy)
+from repro.core.session import KVState, Phase, Round, Session, make_session
+from repro.core.telemetry import Telemetry, TelemetryConfig

@@ -1,0 +1,105 @@
+"""External Control Plane (paper §4.2, Algorithm 1).
+
+Global Load Balancer  — ``pack_queue``: pressure-aware admission ordering
+    * normal        -> ascending by estimated KV blocks (favor interactive)
+    * CPU overload  -> descending (favor GPU-heavy, throttle new tool work)
+    * all-long queue-> first-fit under the available KV budget
+External Admission Controller — ``update_window``: AIMD window W_adm with
+hysteresis (in Telemetry), clamped by CPU- and KV-derived limits.
+``balance_and_admit`` composes both into one control step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+from repro.core import events as ev
+from repro.core.events import EventBus
+from repro.core.session import Session
+from repro.core.telemetry import Telemetry
+
+
+@dataclass
+class ControlPlaneConfig:
+    w_init: float = 8.0
+    w_min: float = 1.0
+    w_max: float = 512.0
+    additive_alpha: float = 1.0        # const alpha > 0   (Alg.1 l.17)
+    multiplicative_beta: float = 0.7   # const beta < 1    (Alg.1 l.15)
+    control_interval: float = 2.0      # seconds between AIMD updates
+    long_session_blocks: int = 1024    # "long" threshold for first-fit mode
+    block_size: int = 32
+
+
+class ExternalControlPlane:
+    def __init__(self, cfg: ControlPlaneConfig, telem: Telemetry, bus: EventBus):
+        self.cfg = cfg
+        self.telem = telem
+        self.bus = bus
+        self.w_adm = cfg.w_init
+        self._last_update = -1e18
+
+    # --- helpers -------------------------------------------------------------
+    def estimate_blocks(self, s: Session) -> int:
+        """Lightweight per-session KV-block estimate from prefill length
+        (proxy for both compute demand and spatial footprint)."""
+        return max(1, -(-s.pending_prefill // self.cfg.block_size))
+
+    # --- Alg.1 PackQueue ------------------------------------------------------
+    def pack_queue(self, queue: List[Session]) -> List[Session]:
+        t = self.telem
+        est = {s.sid: self.estimate_blocks(s) for s in queue}
+        if not queue:
+            return queue
+        if t.cpu_overloaded:
+            return sorted(queue, key=lambda s: -est[s.sid])
+        if all(e >= self.cfg.long_session_blocks for e in est.values()):
+            return self._first_fit(queue, est, t.free_blocks)
+        return sorted(queue, key=lambda s: est[s.sid])
+
+    @staticmethod
+    def _first_fit(queue: List[Session], est, available: int) -> List[Session]:
+        """Assemble a feasible admission set under the current KV budget,
+        then append the rest (largest-last) — oversized heads no longer block
+        admissible sessions behind them."""
+        fits, rest, budget = [], [], available
+        for s in sorted(queue, key=lambda s: est[s.sid]):
+            if est[s.sid] <= budget:
+                fits.append(s)
+                budget -= est[s.sid]
+            else:
+                rest.append(s)
+        return fits + rest
+
+    # --- Alg.1 UpdateWindow ---------------------------------------------------
+    def update_window(self, now: float, avg_blocks_per_session: float) -> int:
+        c, t = self.cfg, self.telem
+        w_cpu = t.calc_cpu_limit()
+        w_kv = t.calc_kv_limit(avg_blocks_per_session)
+        if now - self._last_update >= c.control_interval:
+            if t.cpu_overloaded or t.kv_overloaded:
+                self.w_adm = max(c.w_min, self.w_adm * c.multiplicative_beta)
+            elif not t.cpu_overloaded and t.has_kv_slack():
+                self.w_adm = min(c.w_max, self.w_adm + c.additive_alpha)
+            self._last_update = now
+            self.bus.emit(ev.WINDOW_UPDATE, now, w_adm=self.w_adm,
+                          w_cpu=w_cpu, w_kv=w_kv,
+                          cpu_overloaded=t.cpu_overloaded,
+                          kv_overloaded=t.kv_overloaded)
+        return int(min(self.w_adm, w_cpu, w_kv))
+
+    # --- Alg.1 BalanceAndAdmit -------------------------------------------------
+    def balance_and_admit(self, queue: List[Session], now: float) -> List[Session]:
+        if not queue:
+            return []
+        ordered = self.pack_queue(queue)
+        avg_blocks = (sum(self.estimate_blocks(s) for s in queue) / len(queue))
+        limit = self.update_window(now, avg_blocks)
+        slots = limit - self.telem.active_sessions
+        if slots <= 0:
+            return []
+        admitted = ordered[:slots]
+        for s in admitted:
+            self.bus.emit(ev.ADMIT, now, s.sid,
+                          est_blocks=self.estimate_blocks(s))
+        return admitted

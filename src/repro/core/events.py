@@ -1,0 +1,72 @@
+"""Unified Information Stream (paper §4.1, Table 1).
+
+Structured boundary events with stable session identifiers, emitted whenever
+a session changes execution state on either plane:
+
+    GPU plane:     gpu_submit / gpu_first_token / gpu_end
+    CPU plane:     tool_enqueue / tool_start / tool_end
+    Control plane: window_update / admit / evict / pin / unpin / preempt / swap
+
+Both the external control plane and the internal scheduler consume the same
+stream; consumers subscribe with callbacks and the full log is retained for
+benchmarks (eviction-dynamics figures read it directly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+GPU_SUBMIT = "gpu_submit"
+GPU_FIRST_TOKEN = "gpu_first_token"
+GPU_END = "gpu_end"
+TOOL_ENQUEUE = "tool_enqueue"
+TOOL_START = "tool_start"
+TOOL_END = "tool_end"
+WINDOW_UPDATE = "window_update"
+ADMIT = "admit"
+EVICT = "evict"
+PIN = "pin"
+UNPIN = "unpin"
+PREEMPT = "preempt"
+SWAP_OUT = "swap_out"
+SWAP_IN = "swap_in"
+FINISH = "finish"
+
+
+@dataclass(frozen=True)
+class Event:
+    kind: str
+    t: float
+    sid: int = -1
+    data: Dict[str, Any] = field(default_factory=dict)
+
+
+class EventBus:
+    """Low-overhead pub/sub + append log."""
+
+    def __init__(self, keep_log: bool = True):
+        self._subs: Dict[str, List[Callable[[Event], None]]] = {}
+        self._all: List[Callable[[Event], None]] = []
+        self.log: List[Event] = []
+        self.keep_log = keep_log
+        self.counts: Dict[str, int] = {}
+
+    def subscribe(self, kind: Optional[str], fn: Callable[[Event], None]) -> None:
+        if kind is None:
+            self._all.append(fn)
+        else:
+            self._subs.setdefault(kind, []).append(fn)
+
+    def emit(self, kind: str, t: float, sid: int = -1, /, **data) -> Event:
+        ev = Event(kind, t, sid, data)
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        if self.keep_log:
+            self.log.append(ev)
+        for fn in self._subs.get(kind, ()):
+            fn(ev)
+        for fn in self._all:
+            fn(ev)
+        return ev
+
+    def of_kind(self, kind: str) -> List[Event]:
+        return [e for e in self.log if e.kind == kind]

@@ -1,0 +1,252 @@
+"""Scheduling policies: MARS + the paper's baselines (§6.2), all pluggable
+into the same engine (identical tool stacks, batching, KV accounting — the
+paper's fairness requirement).
+
+    FCFS          vLLM default: arrival order, no admission, KV freed at tool
+    Autellix      PLAS: program-level accumulated-service priority; resource-
+                  agnostic (no admission control, no KV management)
+    InferCept     one-shot min-cost {preserve | swap | discard} at tool time,
+                  from per-tool-type EMA duration estimates
+    Continuum     pin with fixed TTL at tool start
+    Continuum-Dy  pin with TTL = EMA(tool kind) * factor
+    MARS          external control plane (AIMD admission + queue packing) +
+                  MLFQ coordinator + opportunistic co-scheduler (adaptive,
+                  re-evaluated retention; priority-aligned eviction)
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
+from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler
+from repro.core.events import EventBus
+from repro.core.mlfq import MLFQConfig, PriorityCoordinator
+from repro.core.session import KVState, Session
+from repro.core.telemetry import Telemetry
+
+
+class KVAction(enum.Enum):
+    FREE = "free"
+    PIN = "pin"
+    SWAP = "swap"
+
+
+class PerfOracle(Protocol):
+    def recompute_time(self, n_tokens: int) -> float: ...
+    def swap_time(self, n_tokens: int) -> float: ...
+    def prefill_rate(self) -> float: ...   # sustainable prefill tokens/s
+
+
+class Policy:
+    """Engine hook points. The base class is the FCFS/throughput-centric
+    engine: admit everything, serve in arrival order, drop KV at tool
+    boundaries, preempt most-recent-first."""
+
+    name = "fcfs"
+
+    def __init__(self, telem: Telemetry, bus: EventBus, oracle: PerfOracle):
+        self.telem = telem
+        self.bus = bus
+        self.oracle = oracle
+
+    # --- admission (external) ----------------------------------------------
+    def admit(self, queue: List[Session], now: float) -> List[Session]:
+        return list(queue)
+
+    # --- intra-engine ordering ----------------------------------------------
+    def order(self, ready: Sequence[Session], now: float) -> List[Session]:
+        return sorted(ready, key=lambda s: s.arrival_time)
+
+    # --- tool boundary --------------------------------------------------------
+    def on_tool_yield(self, s: Session, now: float) -> Tuple[KVAction, float]:
+        return KVAction.FREE, 0.0
+
+    def tick_pinned(self, pinned: Sequence[Session], now: float) -> List[Session]:
+        """Pins to revoke this tick (TTL expiry / re-evaluation)."""
+        return []
+
+    def reclaim_order(self, pinned: Sequence[Session], now: float) -> List[Session]:
+        return sorted(pinned, key=lambda s: s.pinned_since)
+
+    # --- eviction/preemption ---------------------------------------------------
+    def eviction_order(self, victims: Sequence[Session], now: float,
+                       requester: Optional[Session] = None) -> List[Session]:
+        """Victims the ``requester`` may preempt, best-first. vLLM default:
+        LIFO by arrival, and a requester never preempts sessions that arrived
+        before it (stability: the eviction order is the reverse of the
+        service order, so mutual-eviction livelock is impossible)."""
+        if requester is not None:
+            victims = [v for v in victims
+                       if v.arrival_time > requester.arrival_time]
+        return sorted(victims, key=lambda s: -s.arrival_time)
+
+    # --- prefill chunking --------------------------------------------------------
+    def prefill_chunk(self, want_tokens: int, free_blocks: int,
+                      block_size: int) -> int:
+        """Baselines: fixed-granularity chunked prefill, no shrinking."""
+        if free_blocks <= 0:
+            return 0
+        grantable = free_blocks * block_size
+        return want_tokens if want_tokens <= grantable else 0
+
+
+class AutellixPolicy(Policy):
+    """Program-Level Aware Scheduling: cumulative *program* service-time
+    priority, snapshotted at call submission (non-preemptive at the call
+    level — a call's priority does not decay while it runs)."""
+
+    name = "autellix"
+
+    def order(self, ready, now):
+        for s in ready:
+            if "plas_key" not in s.meta or s.meta.get("plas_round") != s.cur_round:
+                s.meta["plas_key"] = s.service_seconds
+                s.meta["plas_round"] = s.cur_round
+        return sorted(ready, key=lambda s: (s.meta["plas_key"], s.arrival_time))
+
+
+class InferCeptPolicy(Policy):
+    """Min-cost one-shot {preserve, swap, discard} at the tool boundary.
+
+    Costs in byte-seconds (memory waste x duration), following InferCept's
+    formulation, with EMA tool-duration estimates."""
+
+    name = "infercept"
+
+    def on_tool_yield(self, s, now):
+        est = self.telem.tool_estimate(s.cur.tool_kind)
+        kv = max(1, s.kv_blocks)
+        preserve = kv * est
+        swap = kv * 2.0 * self.oracle.swap_time(s.resident_len)
+        discard = 0.5 * kv * self.oracle.recompute_time(s.resident_len)
+        best = min((preserve, KVAction.PIN), (swap, KVAction.SWAP),
+                   (discard, KVAction.FREE), key=lambda x: x[0])
+        return best[1], float("inf")   # one-shot: no TTL re-evaluation
+
+
+class ContinuumPolicy(Policy):
+    """Fixed KV time-to-live at tool start."""
+
+    name = "continuum"
+    fixed_ttl = 30.0
+
+    def on_tool_yield(self, s, now):
+        return KVAction.PIN, self.fixed_ttl
+
+    def tick_pinned(self, pinned, now):
+        return [s for s in pinned if now - s.pinned_since > s.pin_ttl]
+
+    def reclaim_order(self, pinned, now):
+        # closest-to-expiry first
+        return sorted(pinned, key=lambda s: s.pinned_since + s.pin_ttl - now)
+
+
+class ContinuumDynPolicy(ContinuumPolicy):
+    """TTL = per-tool-kind EMA estimate x factor (official dynamic heuristic)."""
+
+    name = "continuum-dy"
+    ttl_factor = 1.25
+
+    def on_tool_yield(self, s, now):
+        est = self.telem.tool_estimate(s.cur.tool_kind)
+        return KVAction.PIN, max(1.0, self.ttl_factor * est)
+
+
+@dataclass
+class MARSConfig:
+    control: ControlPlaneConfig = field(default_factory=ControlPlaneConfig)
+    mlfq: MLFQConfig = field(default_factory=MLFQConfig)
+    cosched: CoSchedulerConfig = field(default_factory=CoSchedulerConfig)
+    # ablations (paper Fig. 13)
+    disable_control_plane: bool = False
+    disable_coordinator: bool = False
+    disable_coscheduler: bool = False
+
+
+class MARSPolicy(Policy):
+    name = "mars"
+
+    def __init__(self, telem, bus, oracle, cfg: Optional[MARSConfig] = None):
+        super().__init__(telem, bus, oracle)
+        self.cfg = cfg or MARSConfig()
+        self.control = ExternalControlPlane(self.cfg.control, telem, bus)
+        self.coord = PriorityCoordinator(self.cfg.mlfq)
+        self.cosched = OpportunisticCoScheduler(
+            self.cfg.cosched, telem, oracle.recompute_time,
+            getattr(oracle, "prefill_rate", None))
+        if self.cfg.disable_control_plane:
+            self.name = "mars-no-ctrl"
+        if self.cfg.disable_coordinator:
+            self.name = "mars-no-coord"
+        if self.cfg.disable_coscheduler:
+            self.name = "mars-no-cosched"
+
+    # external control plane
+    def admit(self, queue, now):
+        if self.cfg.disable_control_plane:
+            return list(queue)
+        return self.control.balance_and_admit(queue, now)
+
+    # priority-aware coordinator
+    def order(self, ready, now):
+        if self.cfg.disable_coordinator:
+            return sorted(ready, key=lambda s: s.arrival_time)
+        return self.coord.order(ready, now)
+
+    def eviction_order(self, victims, now, requester=None):
+        if self.cfg.disable_coordinator:
+            return super().eviction_order(victims, now, requester)
+        if requester is not None:
+            # preemption authority is arrival-stable (no cycles, FCFS-grade
+            # churn bounds); *among* the allowed victims the choice is
+            # priority-aligned (lowest MLFQ priority first, largest KV first)
+            # as per §4.3.
+            victims = [v for v in victims
+                       if v.arrival_time > requester.arrival_time]
+        return self.coord.eviction_order(victims, now)
+
+    # opportunistic co-scheduler
+    def on_tool_yield(self, s, now):
+        if self.cfg.disable_coscheduler:
+            return KVAction.FREE, 0.0
+        if self.cosched.should_pin(s, now):
+            return KVAction.PIN, float("inf")   # adaptive: revoked by ticks
+        return KVAction.FREE, 0.0
+
+    def tick_pinned(self, pinned, now):
+        if self.cfg.disable_coscheduler:
+            return list(pinned)
+        return self.cosched.revoke_pins(pinned, now)
+
+    def reclaim_order(self, pinned, now):
+        if self.cfg.disable_coscheduler:
+            return super().reclaim_order(pinned, now)
+        return self.cosched.reclaim_order(pinned, now)
+
+    def prefill_chunk(self, want_tokens, free_blocks, block_size):
+        if self.cfg.disable_coscheduler:
+            return super().prefill_chunk(want_tokens, free_blocks, block_size)
+        return self.cosched.shrink_chunk(want_tokens, free_blocks)
+
+
+POLICY_CLASSES = {
+    "fcfs": Policy,
+    "autellix": AutellixPolicy,
+    "infercept": InferCeptPolicy,
+    "continuum": ContinuumPolicy,
+    "continuum-dy": ContinuumDynPolicy,
+    "mars": MARSPolicy,
+}
+
+
+def make_policy(name: str, telem: Telemetry, bus: EventBus, oracle: PerfOracle,
+                mars_cfg: Optional[MARSConfig] = None) -> Policy:
+    if name.startswith("mars"):
+        cfg = mars_cfg or MARSConfig(
+            disable_control_plane=(name == "mars-no-ctrl"),
+            disable_coordinator=(name == "mars-no-coord"),
+            disable_coscheduler=(name == "mars-no-cosched"))
+        return MARSPolicy(telem, bus, oracle, cfg)
+    return POLICY_CLASSES[name](telem, bus, oracle)

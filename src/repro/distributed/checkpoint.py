@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing.
+
+Model/optimizer checkpoints: per-leaf ``.npy`` shards + a manifest with
+integrity hashes, written to a temp dir and atomically renamed (a crashed
+writer never corrupts the latest checkpoint). ``save`` can run async on a
+background thread (training overlaps the host write). On restore, leaves are
+device_put against the target shardings — the restore mesh may differ from
+the save mesh (elastic resharding for scale-up/down restarts).
+
+Engine checkpoints: agent sessions are *restartable by construction* (their
+context is re-derivable), so the engine snapshot stores only session progress
++ queue state as JSON; KV is rebuilt by prefix recompute on restart.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(
+            str(p.key) if hasattr(p, "key") else
+            (str(p.idx) if hasattr(p, "idx") else
+             str(p.name) if hasattr(p, "name") else str(p))
+            for p in path)
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def save(path: str, tree, *, step: int = 0, async_: bool = False,
+         keep: int = 3) -> Optional[threading.Thread]:
+    """Write a checkpoint at ``path``/step_<step>. Returns the writer thread
+    when async."""
+    leaves = [(n, np.asarray(l)) for n, l in _flatten(tree)]
+
+    def _write():
+        final = os.path.join(path, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "time": time.time(), "leaves": {}}
+        for name, arr in leaves:
+            fn = os.path.join(tmp, name + ".npy")
+            np.save(fn, arr)
+            with open(fn, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()[:16]
+            manifest["leaves"][name] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "sha256_16": digest}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        _gc(path, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(path: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, target_tree, *, step: Optional[int] = None,
+            shardings=None, verify: bool = True):
+    """Restore into the structure of ``target_tree`` (leaves may be
+    ShapeDtypeStructs). ``shardings``: optional matching pytree — leaves are
+    device_put to them (cross-mesh elastic restore)."""
+    if step is None:
+        step = latest_step(path)
+        assert step is not None, f"no checkpoint under {path}"
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    names = [n for n, _ in _flatten(target_tree)]
+    sh_leaves = [s for _, s in _flatten(shardings)] if shardings is not None \
+        else [None] * len(names)
+    loaded = []
+    for name, sh in zip(names, sh_leaves):
+        fn = os.path.join(d, name + ".npy")
+        arr = np.load(fn)
+        if verify:
+            meta = manifest["leaves"][name]
+            assert list(arr.shape) == meta["shape"], name
+        loaded.append(jax.device_put(arr, sh) if sh is not None else arr)
+    treedef = jax.tree_util.tree_structure(target_tree)
+    return jax.tree_util.tree_unflatten(treedef, loaded), step
+
+
+# ---------------------------------------------------------------------------
+# engine session snapshot (serving-side fault tolerance)
+# ---------------------------------------------------------------------------
+
+def snapshot_engine(engine) -> Dict:
+    """Serializable progress snapshot: sessions resume via prefix recompute."""
+    def sess(s):
+        return {"sid": s.sid, "arrival_time": s.arrival_time,
+                "cur_round": s.cur_round, "decoded": s.decoded,
+                "context_len": s.context_len, "phase": s.phase.value,
+                "slo_alpha": s.slo_alpha, "ideal_time": s.ideal_time,
+                "service_tokens": s.service_tokens,
+                "rounds": [{"new_input_tokens": r.new_input_tokens,
+                            "decode_tokens": r.decode_tokens,
+                            "tool_kind": r.tool_kind,
+                            "tool_seconds": r.tool_seconds}
+                           for r in s.rounds]}
+    return {"waiting": [sess(s) for s in engine.waiting],
+            "active": [sess(s) for s in engine.active],
+            "finished_sids": [s.sid for s in engine.finished]}
+
+
+def restore_engine(engine, snap: Dict) -> int:
+    """Re-enqueue unfinished sessions (cold KV, prefix recompute); returns
+    the number of recovered sessions."""
+    from repro.core.session import Phase, Round, Session
+    n = 0
+    for rec in snap["waiting"] + snap["active"]:
+        rounds = [Round(**r) for r in rec["rounds"]]
+        s = Session(sid=rec["sid"], arrival_time=rec["arrival_time"],
+                    rounds=rounds, slo_alpha=rec["slo_alpha"],
+                    ideal_time=rec["ideal_time"])
+        s.cur_round = rec["cur_round"]
+        # a session snapshotted mid-tool has decoded == the round's full
+        # target; redo the last token (and hence the tool) on recovery —
+        # agentic rounds are re-derivable, tool side effects re-run.
+        s.decoded = max(0, min(rec["decoded"],
+                               rounds[s.cur_round].decode_tokens - 1))
+        s.service_tokens = rec["service_tokens"]
+        engine.submit(s)
+        n += 1
+    return n

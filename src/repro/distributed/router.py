@@ -1,0 +1,170 @@
+"""Cluster-level control plane (paper §7 "Scalability to Multi-GPU Systems").
+
+The external control plane generalizes to a fleet gateway: engine replicas
+register, export their dual-pressure telemetry (KV pool, tool backlog, AIMD
+window, EMA step latency), and the router
+
+  * places sessions on the replica with the best (pressure, affinity) score —
+    KV locality first: a session returns to the replica that served it last
+    (warm state), unless that replica is overloaded or degraded;
+  * detects failures by heartbeat timeout and re-queues the victim's sessions
+    (they resume by prefix recompute — see checkpoint.snapshot_engine);
+  * mitigates stragglers: replicas whose EMA step latency exceeds
+    ``straggler_factor`` x fleet median get drained (no new placements);
+  * supports elastic join/leave at any time.
+
+This layer is transport-agnostic: replicas here are in-process Engine objects
+(tests/examples drive thousands of simulated nodes); a deployment would put
+the same logic behind an RPC server.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.session import Session
+
+
+@dataclass
+class ReplicaState:
+    rid: str
+    engine: object = None
+    last_heartbeat: float = 0.0
+    kv_utilization: float = 0.0
+    tool_backlog: int = 0
+    active_sessions: int = 0
+    step_latency_ema: float = 0.0
+    alive: bool = True
+    draining: bool = False
+    placed: Dict[int, float] = field(default_factory=dict)   # sid -> t
+
+
+@dataclass
+class RouterConfig:
+    heartbeat_timeout: float = 10.0
+    straggler_factor: float = 2.5
+    ema_alpha: float = 0.2
+    overload_kv: float = 0.95
+    affinity_bonus: float = 0.35
+
+
+class ClusterRouter:
+    def __init__(self, cfg: RouterConfig = None):
+        self.cfg = cfg or RouterConfig()
+        self.replicas: Dict[str, ReplicaState] = {}
+        self.session_home: Dict[int, str] = {}     # sid -> last replica
+        self.requeued: List[Session] = []
+        self.events: List[dict] = []
+
+    # --- membership -----------------------------------------------------
+    def register(self, rid: str, engine=None, now: float = None) -> None:
+        now = time.monotonic() if now is None else now
+        self.replicas[rid] = ReplicaState(rid, engine, last_heartbeat=now)
+        self.events.append({"t": now, "ev": "join", "rid": rid})
+
+    def leave(self, rid: str, now: float = None) -> List[Session]:
+        """Graceful drain: returns sessions to re-place elsewhere."""
+        r = self.replicas.pop(rid, None)
+        out: List[Session] = []
+        if r is not None and r.engine is not None:
+            out = list(r.engine.waiting) + list(r.engine.active)
+        self.events.append({"t": now or time.monotonic(), "ev": "leave",
+                            "rid": rid})
+        return out
+
+    # --- telemetry -----------------------------------------------------------
+    def heartbeat(self, rid: str, *, kv_utilization: float, tool_backlog: int,
+                  active_sessions: int, step_latency: float,
+                  now: float = None) -> None:
+        r = self.replicas.get(rid)
+        if r is None:
+            return
+        now = time.monotonic() if now is None else now
+        r.last_heartbeat = now
+        r.kv_utilization = kv_utilization
+        r.tool_backlog = tool_backlog
+        r.active_sessions = active_sessions
+        a = self.cfg.ema_alpha
+        r.step_latency_ema = step_latency if r.step_latency_ema == 0 else \
+            (1 - a) * r.step_latency_ema + a * step_latency
+        if not r.alive:
+            r.alive = True
+            self.events.append({"t": now, "ev": "recovered", "rid": rid})
+
+    def check_failures(self, now: float = None) -> List[str]:
+        """Heartbeat-timeout detection; re-queues victims' sessions."""
+        now = time.monotonic() if now is None else now
+        failed = []
+        for r in self.replicas.values():
+            if r.alive and now - r.last_heartbeat > self.cfg.heartbeat_timeout:
+                r.alive = False
+                failed.append(r.rid)
+                self.events.append({"t": now, "ev": "failed", "rid": r.rid})
+                if r.engine is not None:
+                    victims = list(r.engine.waiting) + list(r.engine.active)
+                    for s in victims:
+                        s.kv_blocks = 0
+                        s.resident_len = 0
+                        self.requeued.append(s)
+        return failed
+
+    # --- straggler mitigation ---------------------------------------------------
+    def _median_latency(self) -> float:
+        xs = [r.step_latency_ema for r in self.replicas.values()
+              if r.alive and r.step_latency_ema > 0]
+        return float(np.median(xs)) if xs else 0.0
+
+    def update_stragglers(self, now: float = None) -> List[str]:
+        med = self._median_latency()
+        out = []
+        for r in self.replicas.values():
+            was = r.draining
+            r.draining = bool(
+                med > 0 and r.step_latency_ema > self.cfg.straggler_factor * med)
+            if r.draining and not was:
+                out.append(r.rid)
+                self.events.append({"t": now or time.monotonic(),
+                                    "ev": "straggler_drain", "rid": r.rid})
+        return out
+
+    # --- placement -----------------------------------------------------------
+    def _score(self, r: ReplicaState, s: Session) -> float:
+        """Lower is better: dual-pressure load + straggler penalty -
+        KV-locality affinity."""
+        load = r.kv_utilization + 0.05 * r.tool_backlog \
+            + 0.02 * r.active_sessions
+        med = self._median_latency()
+        if med > 0 and r.step_latency_ema > 0:
+            load += max(0.0, r.step_latency_ema / med - 1.0)
+        if self.session_home.get(s.sid) == r.rid:
+            load -= self.cfg.affinity_bonus      # warm KV / state locality
+        return load
+
+    def place(self, s: Session, now: float = None) -> Optional[str]:
+        now = time.monotonic() if now is None else now
+        cands = [r for r in self.replicas.values()
+                 if r.alive and not r.draining
+                 and r.kv_utilization < self.cfg.overload_kv]
+        if not cands:
+            cands = [r for r in self.replicas.values() if r.alive]
+        if not cands:
+            return None
+        best = min(cands, key=lambda r: self._score(r, s))
+        best.placed[s.sid] = now
+        self.session_home[s.sid] = best.rid
+        if best.engine is not None:
+            best.engine.submit(s)
+        return best.rid
+
+    def dispatch_requeued(self, now: float = None) -> int:
+        n = 0
+        while self.requeued:
+            s = self.requeued.pop(0)
+            if self.place(s, now) is None:
+                self.requeued.insert(0, s)
+                break
+            n += 1
+        return n

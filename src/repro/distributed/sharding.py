@@ -1,0 +1,225 @@
+"""Sharding rules: DP / TP / EP / SP mapping for every assigned architecture.
+
+Conventions (see DESIGN.md §4):
+  * 'model' axis (TP=16): attention heads / d_ff / vocab; GQA KV tensors
+    shard on kv-heads when divisible, else on head_dim.
+  * 'data' (+ 'pod') axes: batch DP; for dbrx-style MoE the 'data' axis
+    doubles as the EP axis (experts sharded, all_to_all dispatch).
+  * long-context decode with global_batch=1 shards the KV *sequence* over
+    'data' (SP) — XLA partitions the softmax reductions with psums.
+
+``param_specs`` walks the param pytree by path; unknown leaves replicate.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParallelCtx
+
+MODEL_AXIS = "model"
+
+
+def make_pctx(cfg: ModelConfig, mesh) -> ParallelCtx:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    ep = "data" if (cfg.moe is not None and cfg.moe.shard_mode == "ep"
+                    and "data" in mesh.axis_names) else None
+    return ParallelCtx(mesh=mesh, dp_axes=dp, tp_axis=MODEL_AXIS, ep_axis=ep)
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+# --- per-leaf rules ---------------------------------------------------------
+
+def _sanitize(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop shardings whose dimension doesn't divide by the axis size."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def _rule(cfg: ModelConfig, mesh, path: Tuple[str, ...], ndim: int,
+          shape: Tuple[int, ...]) -> P:
+    name = path[-1]
+    joined = "/".join(path)
+    ep = cfg.moe is not None and cfg.moe.shard_mode == "ep" \
+        and "data" in mesh.axis_names and \
+        cfg.moe.num_experts % mesh.shape["data"] == 0
+    E_AX = "data" if ep else None
+    tp = mesh.shape.get(MODEL_AXIS, 1)
+
+    def pad(spec: Tuple) -> P:
+        """Left-pad with None for stacked-layer leading dims."""
+        return P(*((None,) * (ndim - len(spec)) + spec))
+
+    # embeddings / heads: vocab-shard when divisible, else d_model-shard
+    # (whisper 51865 / granite 49155 vocabs don't divide by 16)
+    if name == "embed":
+        return pad((MODEL_AXIS, None)) if cfg.vocab_size % tp == 0 \
+            else pad((None, MODEL_AXIS))
+    if name == "lm_head":
+        return pad((None, MODEL_AXIS)) if cfg.vocab_size % tp == 0 \
+            else pad((MODEL_AXIS, None))
+    if name == "dec_pos":
+        return pad((None, None))
+    # attention
+    if name in ("wq", "wk", "wv") and "attn" in joined:
+        return pad((None, MODEL_AXIS))
+    if name == "wo" and "attn" in joined:
+        return pad((MODEL_AXIS, None))
+    if name in ("bq", "bk", "bv"):
+        return pad((MODEL_AXIS,))
+    # dense MLP
+    if name in ("w_gate", "w_up") and "moe" not in joined:
+        return pad((None, MODEL_AXIS))
+    if name == "w_down" and "moe" not in joined:
+        return pad((MODEL_AXIS, None))
+    # MoE experts
+    if name == "router":
+        return pad((None, None))
+    # perf-iteration toggle (EXPERIMENTS.md §Perf): fine-grained tiny experts
+    # (granite, d_ff=512 -> 32/shard under TP) pay a per-layer (E,C,D) psum
+    # that dominates the collective term; replicating them removes it at a
+    # modest weight-memory cost.
+    moe_replicated = cfg.moe is not None and cfg.moe.shard_mode == "tp" and \
+        "moe_replicated" in os.environ.get("REPRO_OPT", "")
+    if name in ("w_gate", "w_up") and "moe" in joined:
+        return pad((E_AX, None, None if moe_replicated else MODEL_AXIS))
+    if name == "w_down" and "moe" in joined:
+        return pad((E_AX, None if moe_replicated else MODEL_AXIS, None))
+    # RWKV time/channel mix
+    if name in ("wr", "wk", "wv", "wg", "cm_wk", "cm_wr"):
+        return pad((None, MODEL_AXIS))
+    if name in ("wo", "cm_wv") and cfg.family == "rwkv6":
+        return pad((MODEL_AXIS, None))
+    # Mamba2
+    if name in ("w_z", "w_x"):
+        return pad((None, MODEL_AXIS))
+    if name in ("conv_x_w",):
+        return pad((MODEL_AXIS, None))
+    if name in ("conv_x_b", "gn_scale"):
+        return pad((MODEL_AXIS,))
+    if name == "w_out" and cfg.family == "zamba2":
+        return pad((MODEL_AXIS, None))
+    # zamba shared-block input projection
+    if name == "in_proj":
+        return pad((None, None))
+    return P(*((None,) * ndim))
+
+
+def param_specs(cfg: ModelConfig, mesh, params_or_specs) -> Any:
+    """Pytree of PartitionSpec matching the params tree."""
+
+    def spec_of(path, leaf) -> P:
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        shape = tuple(leaf.shape)
+        spec = _rule(cfg, mesh, names, len(shape), shape)
+        return _sanitize(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_or_specs)
+
+
+def param_shardings(cfg: ModelConfig, mesh, params_or_specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_or_specs))
+
+
+def opt_moment_spec(pspec: P, shape: Tuple[int, ...], mesh) -> P:
+    """ZeRO-1-style distributed optimizer: Adam moments additionally shard
+    their largest dim over 'data' (f32 moments are 4x the bf16 params — for
+    34B-class dense models TP-16 alone cannot fit them on a 16 GB chip).
+    The update stays elementwise; GSPMD re-gathers params after the step."""
+    if "data" not in mesh.shape:
+        return pspec
+    used = set()
+    for ax in pspec:
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            if a is not None:
+                used.add(a)
+    if "data" in used:               # EP weights already consume the data axis
+        return pspec
+    dsize = mesh.shape["data"]
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    best, best_dim = -1, None
+    for i, (dim, ax) in enumerate(zip(shape, spec)):
+        if ax is None and dim % dsize == 0 and dim > best:
+            best, best_dim = dim, i
+    if best_dim is not None and best >= dsize:
+        spec[best_dim] = "data"
+    return P(*spec)
+
+
+# --- activation / cache specs ------------------------------------------------
+
+def batch_spec(mesh) -> P:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return P(dp, None)
+
+
+def kv_head_axis(cfg: ModelConfig, mesh) -> Tuple[Optional[str], Optional[str]]:
+    """(spec axis for kv-heads dim, spec axis for head_dim dim)."""
+    if _divisible(cfg.n_kv_heads, mesh, MODEL_AXIS):
+        return MODEL_AXIS, None
+    if _divisible(cfg.head_dim_, mesh, MODEL_AXIS):
+        return None, MODEL_AXIS
+    return None, None
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, *,
+                seq_shard: bool = False) -> Any:
+    """PartitionSpec pytree matching model_zoo.cache_specs structure.
+
+    ``seq_shard=True`` (long-context, batch=1): shard the KV sequence over
+    'data' (SP) instead of the batch.
+    """
+    h_ax, d_ax = kv_head_axis(cfg, mesh)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    b_ax: Any = dp if not seq_shard and batch % _dp_size(mesh) == 0 else None
+    s_ax = "data" if seq_shard else None
+    kv = P(None, b_ax, s_ax, h_ax, d_ax)
+    if cfg.family in ("dense", "moe"):
+        from repro.models.transformer import KVCache
+        return KVCache(kv, kv)
+    if cfg.family == "whisper":
+        from repro.models.whisper import EncDecCache
+        return EncDecCache(kv, kv, kv, kv)
+    if cfg.family == "rwkv6":
+        from repro.models.rwkv6 import RWKVState
+        hx = MODEL_AXIS if _divisible(cfg.d_model // cfg.rwkv.head_size, mesh,
+                                      MODEL_AXIS) else None
+        return RWKVState(P(None, b_ax, None), P(None, b_ax, None),
+                         P(None, b_ax, hx, None, None))
+    if cfg.family == "zamba2":
+        from repro.models.mamba2 import MambaState
+        from repro.models.zamba2 import ZambaCache
+        hm = MODEL_AXIS if _divisible(cfg.ssm.n_heads(cfg.d_model), mesh,
+                                      MODEL_AXIS) else None
+        mamba = MambaState(P(None, b_ax, None, None),
+                           P(None, b_ax, hm, None, None))
+        return ZambaCache(mamba, kv, kv)
+    raise ValueError(cfg.family)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= mesh.shape[a]
+    return n

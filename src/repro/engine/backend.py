@@ -1,0 +1,92 @@
+"""Execution backends.
+
+``SimBackend`` — analytic service-time model under a virtual clock. One
+engine tick executes a *mixed batch* (Sarathi-style: decode quanta piggyback
+prefill chunks); its service time is the max of the compute term (all FLOPs)
+and the memory term (weight read once + KV traffic), which naturally models
+prefill/decode interference and the benefit of chunking.
+
+``JaxBackend`` lives in ``jax_runner.py`` (real jit'd steps, wall clock).
+Both expose the ``PerfOracle`` the policies need (recompute/swap times).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+from repro.core.session import Session
+from repro.models import perf_model as pm
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class BatchWork:
+    """One engine tick's worth of GPU work."""
+    decodes: List[Tuple[Session, int]]        # (session, n_tokens this quantum)
+    prefills: List[Tuple[Session, int]]       # (session, chunk_tokens)
+    swapins: List[Tuple[Session, int]]        # (session, tokens restored)
+    swapouts: List[Tuple[Session, int]] = None  # (session, tokens offloaded)
+
+    def __post_init__(self):
+        if self.swapouts is None:
+            self.swapouts = []
+
+    @property
+    def empty(self) -> bool:
+        return not (self.decodes or self.prefills or self.swapins
+                    or self.swapouts)
+
+
+class SimBackend:
+    name = "sim"
+
+    def __init__(self, cfg: ModelConfig, hw: pm.HardwareSpec, tp: int = 1):
+        self.cfg = cfg
+        self.hw = hw
+        self.tp = tp
+        # cache analytic constants
+        self._w_bytes = 2.0 * cfg.param_count(active_only=True)
+        self._flops_tok_base = pm.flops_per_token(cfg, 0)
+
+    # --- PerfOracle -----------------------------------------------------------
+    def recompute_time(self, n_tokens: int) -> float:
+        if n_tokens <= 0:
+            return 0.0
+        return pm.prefill_time(self.cfg, self.hw, n_tokens, 0, self.tp)
+
+    def swap_time(self, n_tokens: int) -> float:
+        return pm.swap_time(self.cfg, self.hw, n_tokens)
+
+    def prefill_rate(self) -> float:
+        """Sustainable prefill tokens/s at a typical agentic context."""
+        f = pm.flops_per_token(self.cfg, 64_000)
+        return self.hw.peak_flops * self.tp * self.hw.mfu_prefill / f
+
+    # --- execution ---------------------------------------------------------------
+    def run_batch(self, work: BatchWork, now: float) -> float:
+        """Modeled seconds for one mixed continuous-batching iteration."""
+        if work.empty:
+            return 0.0
+        hw, cfg, tp = self.hw, self.cfg, self.tp
+        flops = 0.0
+        kv_read = 0.0
+        kv_write = 0.0
+        for s, g in work.decodes:
+            flops += g * pm.flops_per_token(cfg, s.resident_len)
+            kv_read += g * pm.kv_cache_bytes(cfg, s.resident_len)
+            kv_write += g * pm.kv_bytes_per_token(cfg)
+        for s, chunk in work.prefills:
+            flops += chunk * pm.flops_per_token(cfg, s.resident_len + chunk // 2)
+            kv_write += chunk * pm.kv_bytes_per_token(cfg)
+            kv_read += pm.kv_cache_bytes(cfg, s.resident_len)   # attend prefix
+        t_compute = flops / (hw.peak_flops * tp * hw.mfu_prefill)
+        t_memory = (self._w_bytes / tp + kv_read + kv_write) / \
+            (hw.hbm_bw * tp * hw.mbu_decode)
+        t = max(t_compute, t_memory)
+        # host<->device KV transfers serialize with the engine step (vLLM
+        # swapping is synchronous at scheduling boundaries)
+        for s, toks in work.swapins:
+            t += self.swap_time(toks)
+        for s, toks in work.swapouts:
+            t += self.swap_time(toks)
+        return t

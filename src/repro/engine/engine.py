@@ -1,0 +1,471 @@
+"""Continuous-batching engine with MARS-style decoupled control.
+
+One ``tick`` is one engine iteration:
+
+    1. drain tool completions (unified info stream)      -> sessions resume
+    2. O(1) block-pool + backlog probe                   -> telemetry
+    3. external admission (policy.admit; MARS = Alg. 1)
+    4. pin re-evaluation (adaptive retention / TTL expiry)
+    5. batch formation: decodes first (priority order), then chunked
+       prefills under the token budget; chunk shrinking; pinned KV is
+       reclaimed before any running victim is preempted
+    6. backend.run_batch (sim: modeled seconds; jax: wall seconds)
+    7. bookkeeping: TTFT per round, tool yields + retention decisions,
+       completion accounting
+
+The same loop drives the discrete-event simulator and the live JAX engine —
+only the backend, the tool executor, and the clock differ.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Set, Tuple
+
+from repro.core import events as ev
+from repro.core.events import EventBus
+from repro.core.policies import KVAction, MARSConfig, Policy, make_policy
+from repro.core.session import KVState, Phase, Round, Session
+from repro.core.telemetry import Telemetry, TelemetryConfig
+from repro.engine.backend import BatchWork
+from repro.engine.block_manager import BlockManager
+from repro.engine.tools import SimToolExecutor
+
+
+@dataclass
+class EngineConfig:
+    total_kv_blocks: int = 8192
+    block_size: int = 32
+    token_budget: int = 8192          # per-tick prefill+decode token budget
+    max_decode_batch: int = 64
+    decode_granularity: int = 8
+    cpu_slots: int = 16
+    telem: TelemetryConfig = None     # derived from cpu_slots if None
+
+    def __post_init__(self):
+        if self.telem is None:
+            self.telem = TelemetryConfig(cpu_slots=self.cpu_slots)
+
+
+class Engine:
+    def __init__(self, cfg: EngineConfig, policy_name: str, backend, *,
+                 bus: Optional[EventBus] = None, tool_exec=None,
+                 mars_cfg: Optional[MARSConfig] = None):
+        self.cfg = cfg
+        self.bus = bus or EventBus()
+        self.backend = backend
+        self.blocks = BlockManager(cfg.total_kv_blocks, cfg.block_size)
+        self.telem = Telemetry(cfg.telem, self.bus)
+        self.policy: Policy = make_policy(policy_name, self.telem, self.bus,
+                                          backend, mars_cfg)
+        self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
+        self.waiting: List[Session] = []
+        self.active: List[Session] = []
+        self.pinned: List[Session] = []
+        self.finished: List[Session] = []
+        self.rejected: List[Session] = []
+        self._pending_swapouts: List[Tuple[Session, int]] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, s: Session) -> None:
+        # admission-reject sessions that can never fit the KV pool (their
+        # full context exceeds capacity): a 4xx in a real deployment. Without
+        # this they would livelock in the stall hatch forever.
+        total_tokens = sum(r.new_input_tokens + r.decode_tokens
+                           for r in s.rounds)
+        if self.blocks.blocks_for(total_tokens) > 0.98 * self.blocks.total:
+            s.phase = Phase.FINISHED
+            s.meta["rejected"] = True
+            self.rejected.append(s)
+            self.bus.emit("reject", s.arrival_time, s.sid,
+                          tokens=total_tokens)
+            return
+        s.phase = Phase.WAITING_ADMIT
+        self.waiting.append(s)
+
+    def done(self) -> bool:
+        return not self.waiting and not self.active
+
+    def next_timer_event(self) -> Optional[float]:
+        """Earliest pinned-KV TTL expiry (finite TTLs only) — the sim driver
+        must not jump the clock past policy timers."""
+        ts = [s.pinned_since + s.pin_ttl for s in self.pinned
+              if s.pin_ttl != float("inf")]
+        return min(ts) if ts else None
+
+    def check_invariants(self) -> None:
+        """Block-accounting and state-machine invariants (used by tests)."""
+        held = sum(s.kv_blocks for s in self.active)
+        assert self.blocks.free + held == self.blocks.total, \
+            f"block leak: free={self.blocks.free} held={held} " \
+            f"total={self.blocks.total}"
+        pinned = sum(s.kv_blocks for s in self.pinned)
+        assert self.blocks.pinned == pinned, \
+            f"pin accounting: {self.blocks.pinned} != {pinned}"
+        for s in self.pinned:
+            assert s.kv_state == KVState.PINNED and s.phase == Phase.TOOL
+        for s in self.active:
+            assert s.kv_blocks >= 0
+            assert s.resident_len <= s.kv_blocks * self.cfg.block_size
+        for s in self.finished:
+            assert s.kv_blocks == 0 and s.phase == Phase.FINISHED
+
+    # ------------------------------------------------------------------
+    def tick(self, now: float) -> Tuple[float, bool]:
+        """Returns (elapsed_seconds, progressed)."""
+        progressed = False
+        # 1. tool completions
+        for s in self.tools.poll(now):
+            self._resume_from_tool(s, now)
+            progressed = True
+        # 2. telemetry probe
+        self._probe()
+        # 3. admission
+        if self.waiting:
+            admitted = self.policy.admit(self.waiting, now)
+            for s in admitted:
+                self.waiting.remove(s)
+                self.active.append(s)
+                s.phase = Phase.READY_PREFILL
+                s.admitted_at = s.last_service = now
+                s.round_submit = now
+                self.bus.emit(ev.GPU_SUBMIT, now, s.sid, round=s.cur_round,
+                              tokens=s.pending_prefill)
+                progressed = True
+            if admitted:
+                self._probe()
+        # 4. pin re-evaluation
+        for s in list(self.policy.tick_pinned(self.pinned, now)):
+            self._release_kv(s, now, reason="pin_revoked")
+            progressed = True
+        # 5-6. batch formation + execution
+        work = self._form_batch(now)
+        elapsed = self.backend.run_batch(work, now)
+        # 7. bookkeeping
+        if not work.empty:
+            self._apply(work, now, now + elapsed, elapsed)
+            progressed = True
+        return elapsed, progressed
+
+    # ------------------------------------------------------------------
+    def _probe(self) -> None:
+        p = self.blocks.probe()
+        waiting_blocks = sum(
+            self.blocks.blocks_for(s.pending_prefill)
+            for s in self.waiting)
+        waiting_blocks += sum(
+            self.blocks.blocks_for(s.pending_prefill) - s.kv_blocks
+            for s in self.active if s.phase == Phase.READY_PREFILL)
+        n_dec = sum(1 for s in self.active if s.phase == Phase.DECODING)
+        self.telem.probe_gpu(p.total, p.free, p.pinned, len(self.active),
+                             n_dec, max(0, waiting_blocks))
+
+    def _resume_from_tool(self, s: Session, now: float) -> None:
+        if s in self.pinned:
+            self.pinned.remove(s)
+            self.blocks.unpin(s.kv_blocks)
+            s.kv_state = KVState.RESIDENT
+            self.bus.emit(ev.UNPIN, now, s.sid, warm=True)
+        s.cur_round += 1
+        s.decoded = 0
+        s.first_token_seen = False
+        s.phase = Phase.READY_PREFILL
+        s.round_submit = now
+        self.bus.emit(ev.GPU_SUBMIT, now, s.sid, round=s.cur_round,
+                      tokens=s.pending_prefill)
+
+    def _release_kv(self, s: Session, now: float, reason: str) -> None:
+        if s.kv_state == KVState.PINNED:
+            self.blocks.unpin(s.kv_blocks)
+            if s in self.pinned:
+                self.pinned.remove(s)
+        if s.kv_blocks:
+            self.blocks.release(s.kv_blocks)
+            self.bus.emit(ev.EVICT, now, s.sid, blocks=s.kv_blocks,
+                          reason=reason)
+        s.kv_blocks = 0
+        s.resident_len = 0
+        s.kv_state = KVState.NONE
+        release = getattr(self.backend, "release_session", None)
+        if release is not None:
+            release(s.sid)
+
+    def _preempt(self, s: Session, now: float) -> None:
+        s.preemptions += 1
+        s.recomputed_tokens += s.resident_len
+        if s.phase == Phase.DECODING:
+            s.phase = Phase.READY_PREFILL
+        self.bus.emit(ev.PREEMPT, now, s.sid, tokens=s.resident_len,
+                      blocks=s.kv_blocks)
+        self._release_kv(s, now, reason="preempt")
+
+    def _ensure_blocks(self, n: int, now: float, in_batch: Set[int],
+                       requester: Session, allow_preempt: bool) -> bool:
+        """Free >= n blocks: reclaim pinned contexts first (policy order);
+        preempt running/resident victims only if ``allow_preempt`` (decode
+        extensions and the stall escape hatch — waiting prefills otherwise
+        never preempt, matching vLLM semantics)."""
+        if self.blocks.free >= n:
+            return True
+        for s in self.policy.reclaim_order(list(self.pinned), now):
+            self._release_kv(s, now, reason="reclaim")
+            if self.blocks.free >= n:
+                return True
+        if not allow_preempt:
+            return False
+        victims = [v for v in self.active
+                   if v.kv_blocks > 0 and v.sid != requester.sid
+                   and v.sid not in in_batch and v.phase != Phase.TOOL]
+        for v in self.policy.eviction_order(victims, now, requester):
+            self._preempt(v, now)
+            if self.blocks.free >= n:
+                return True
+        return self.blocks.free >= n
+
+    # ------------------------------------------------------------------
+    def _form_batch(self, now: float) -> BatchWork:
+        c = self.cfg
+        ready = [s for s in self.active
+                 if s.phase in (Phase.READY_PREFILL, Phase.DECODING)]
+        order = self.policy.order(ready, now)
+        decodes: List[Tuple[Session, int]] = []
+        prefills: List[Tuple[Session, int]] = []
+        swapins: List[Tuple[Session, int]] = []
+        in_batch: Set[int] = set()
+        budget = c.token_budget
+
+        # decodes first: latency-sensitive continuations. Decode extensions
+        # may preempt (they must make progress to ever release memory).
+        for s in order:
+            if s.phase != Phase.DECODING or len(decodes) >= c.max_decode_batch:
+                continue
+            g = min(c.decode_granularity, s.cur.decode_tokens - s.decoded, budget)
+            if g <= 0:
+                continue
+            need = self.blocks.blocks_for(s.resident_len + g) - s.kv_blocks
+            if need > 0:
+                if not self._ensure_blocks(need, now, in_batch, s,
+                                           allow_preempt=True):
+                    continue
+                self.blocks.alloc(need)
+                s.kv_blocks += need
+            decodes.append((s, g))
+            in_batch.add(s.sid)
+            budget -= g
+
+        # prefills / swap-ins fill the remaining budget from free blocks and
+        # reclaimable pins only (no preemption).
+        for s in order:
+            if s.phase != Phase.READY_PREFILL or budget <= 0:
+                continue
+            before = len(prefills)
+            self._try_prefill(s, now, in_batch, budget, prefills, swapins,
+                              allow_preempt=False)
+            if len(prefills) > before:
+                budget -= prefills[-1][1]
+        # stall escape hatch: pool exhausted by partial holders and nothing
+        # scheduled -> serve the single top-priority ready session, allowing
+        # preemption of strictly junior work (deadlock freedom).
+        if not decodes and not prefills and not swapins:
+            for s in order:
+                if s.phase != Phase.READY_PREFILL:
+                    continue
+                if self._try_prefill(s, now, in_batch, c.token_budget,
+                                     prefills, swapins, allow_preempt=True):
+                    break
+        swapouts, self._pending_swapouts = self._pending_swapouts, []
+        return BatchWork(decodes, prefills, swapins, swapouts)
+
+    def _watermark(self) -> int:
+        """Block reserve prefills may not dip into: active decodes extend by
+        ~1 block each within a few ticks; without this reserve, greedy chunked
+        prefills starve decode extensions into preemption storms (vLLM keeps
+        the same kind of allocation watermark)."""
+        n_dec = sum(1 for s in self.active if s.phase == Phase.DECODING)
+        return max(self.blocks.total // 100, 2 * n_dec)
+
+    def _try_prefill(self, s: Session, now: float, in_batch: Set[int],
+                     budget: int, prefills, swapins, allow_preempt: bool) -> bool:
+        c = self.cfg
+        reserve = 0 if allow_preempt else self._watermark()
+        avail = max(0, self.blocks.free - reserve)
+        if s.kv_state == KVState.SWAPPED:
+            toks = s.meta.get("swapped_len", 0)
+            need = self.blocks.blocks_for(toks)
+            if need > avail and not self._ensure_blocks(
+                    need + reserve, now, in_batch, s, allow_preempt):
+                if allow_preempt:        # cannot restore: fall back to recompute
+                    s.kv_state = KVState.NONE
+                    s.meta["swapped_len"] = 0
+                return False
+            self.blocks.alloc(need)
+            s.kv_blocks += need
+            swapins.append((s, toks))
+            in_batch.add(s.sid)
+            return True
+        want = min(s.pending_prefill, budget)
+        if want <= 0:
+            return False
+        chunk = self.policy.prefill_chunk(want, avail, c.block_size)
+        if chunk <= 0:
+            need = self.blocks.blocks_for(want)
+            if not self._ensure_blocks(need + reserve, now, in_batch, s,
+                                       allow_preempt):
+                return False
+            avail = max(0, self.blocks.free - reserve)
+            chunk = self.policy.prefill_chunk(want, avail, c.block_size)
+            if chunk <= 0:
+                return False
+        need = self.blocks.blocks_for(s.resident_len + chunk) - s.kv_blocks
+        if need > self.blocks.free:
+            return False
+        if need > 0:
+            self.blocks.alloc(need)
+            s.kv_blocks += need
+        s.kv_state = KVState.RESIDENT
+        prefills.append((s, chunk))
+        in_batch.add(s.sid)
+        return True
+
+    # ------------------------------------------------------------------
+    def _apply(self, work: BatchWork, start: float, end: float,
+               elapsed: float) -> None:
+        total_tokens = max(1, sum(g for _, g in work.decodes)
+                           + sum(cch for _, cch in work.prefills))
+        for s, toks in work.swapins:
+            s.resident_len = toks
+            s.kv_state = KVState.RESIDENT
+            s.meta["swapped_len"] = 0
+            self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks)
+            if s.pending_prefill <= 0:
+                s.phase = Phase.DECODING
+        for s, chunk in work.prefills:
+            s.resident_len += chunk
+            s.context_len = max(s.context_len, s.resident_len)
+            self._account(s, chunk, elapsed, total_tokens, end)
+            if s.pending_prefill <= 0:
+                s.phase = Phase.DECODING
+        for s, g in work.decodes:
+            s.decoded += g
+            s.resident_len += g
+            s.context_len = max(s.context_len, s.resident_len)
+            self._account(s, g, elapsed, total_tokens, end)
+            if not s.first_token_seen:
+                s.first_token_seen = True
+                s.ttfts.append(end - s.round_submit)
+                self.bus.emit(ev.GPU_FIRST_TOKEN, end, s.sid,
+                              round=s.cur_round,
+                              ttft=end - s.round_submit)
+            if s.decoded >= s.cur.decode_tokens:
+                self._finish_round(s, end)
+
+    def _account(self, s: Session, tokens: int, elapsed: float,
+                 total_tokens: int, end: float) -> None:
+        s.service_tokens += tokens
+        s.service_seconds += elapsed * tokens / total_tokens
+        s.last_service = end
+
+    def _finish_round(self, s: Session, now: float) -> None:
+        self.bus.emit(ev.GPU_END, now, s.sid, round=s.cur_round,
+                      blocks=s.kv_blocks)
+        if s.cur_round == len(s.rounds) - 1:
+            s.phase = Phase.FINISHED
+            s.finish_time = now
+            self._release_kv(s, now, reason="finished")
+            self.active.remove(s)
+            self.finished.append(s)
+            self.bus.emit(ev.FINISH, now, s.sid, latency=s.e2e_latency)
+            return
+        # yield to tool; retention decision
+        r = s.cur
+        action, ttl = self.policy.on_tool_yield(s, now)
+        if action == KVAction.PIN and s.kv_blocks > 0:
+            s.kv_state = KVState.PINNED
+            s.pinned_since = now
+            s.pin_ttl = ttl
+            self.blocks.pin(s.kv_blocks)
+            self.pinned.append(s)
+            self.bus.emit(ev.PIN, now, s.sid, blocks=s.kv_blocks, ttl=ttl)
+        elif action == KVAction.SWAP and s.kv_blocks > 0:
+            s.meta["swapped_len"] = s.resident_len
+            self.blocks.release(s.kv_blocks)
+            self.bus.emit(ev.SWAP_OUT, now, s.sid, blocks=s.kv_blocks)
+            self._pending_swapouts.append((s, s.resident_len))
+            s.kv_blocks = 0
+            s.resident_len = 0
+            s.kv_state = KVState.SWAPPED
+        else:
+            self._release_kv(s, now, reason="tool_free")
+        s.phase = Phase.TOOL
+        s.tool_started = now
+        self.tools.start(s, r.tool_kind or "default", r.tool_seconds, now)
+
+
+# ---------------------------------------------------------------------------
+# simulation driver
+# ---------------------------------------------------------------------------
+
+def run_sim(engine: Engine, sessions: List[Session], *, max_time: float = 1e7,
+            max_ticks: int = 2_000_000, idle_step: float = 0.5
+            ) -> Tuple[List[Session], float]:
+    """Discrete-event run: injects arrivals, jumps the clock over idle gaps.
+
+    Returns (finished sessions, horizon = last finish or final clock)."""
+    arrivals = sorted(sessions, key=lambda s: s.arrival_time)
+    i = 0
+    now = 0.0
+    ticks = 0
+    while ticks < max_ticks and now < max_time:
+        ticks += 1
+        while i < len(arrivals) and arrivals[i].arrival_time <= now:
+            engine.submit(arrivals[i])
+            i += 1
+        elapsed, progressed = engine.tick(now)
+        if elapsed > 0:
+            now += elapsed
+            continue
+        if progressed:
+            continue
+        if engine.done() and i >= len(arrivals):
+            break
+        # idle: jump to the next event
+        candidates = []
+        t_tool = engine.tools.next_event_time()
+        if t_tool is not None:
+            candidates.append(t_tool)
+        t_timer = engine.next_timer_event()
+        if t_timer is not None:
+            candidates.append(t_timer)
+        if i < len(arrivals):
+            candidates.append(arrivals[i].arrival_time)
+        if engine.waiting:
+            candidates.append(now + idle_step)   # let AIMD window recover
+        if not candidates:
+            break
+        now = max(now + 1e-9, min(candidates))
+    horizon = max((s.finish_time for s in engine.finished), default=now)
+    return engine.finished, horizon
+
+
+def run_live(engine: Engine, sessions: List[Session], *, timeout: float = 300.0,
+             idle_sleep: float = 0.005) -> Tuple[List[Session], float]:
+    """Wall-clock run with the live backend + RealToolExecutor.
+
+    ``Session.arrival_time`` is interpreted as seconds from start."""
+    import time as _time
+    t0 = _time.monotonic()
+    arrivals = sorted(sessions, key=lambda s: s.arrival_time)
+    i = 0
+    while _time.monotonic() - t0 < timeout:
+        now = _time.monotonic() - t0
+        while i < len(arrivals) and arrivals[i].arrival_time <= now:
+            engine.submit(arrivals[i])
+            i += 1
+        elapsed, progressed = engine.tick(now)
+        if engine.done() and i >= len(arrivals):
+            break
+        if not progressed and elapsed == 0.0:
+            _time.sleep(idle_sleep)
+    horizon = max((s.finish_time for s in engine.finished),
+                  default=_time.monotonic() - t0)
+    return engine.finished, horizon

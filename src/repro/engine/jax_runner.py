@@ -1,0 +1,187 @@
+"""Live JAX execution backend: the same Engine/tick loop, but ``run_batch``
+really runs jit'd prefill/decode steps of a (reduced) model on this host and
+returns wall-clock seconds.
+
+Slot model: R fixed sequence slots, each with a dense per-slot KV region of
+``max_len`` tokens (jit-stable shapes). The BlockManager still governs
+*capacity* in blocks; physical placement here is slot-dense (the Pallas
+``paged_attention`` kernel demonstrates block-table placement at the kernel
+level — see DESIGN.md §3). Prefill chunks are bucketed to powers of two to
+bound recompilation, and chunked prefill attends to the previously cached
+prefix via ``lm_step`` (exact semantics, not chunk-local attention).
+
+The PerfOracle (recompute_time / prefill_rate / swap_time) is *calibrated* at
+startup by timing one prefill chunk and one decode step — the live analogue
+of the simulator's analytic model.
+
+Position ``max_len - 1`` of every slot is scratch: idle decode lanes park
+their writes there, so sessions may use at most ``max_len - 1`` tokens.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.session import Session
+from repro.engine.backend import BatchWork
+from repro.models import model_zoo
+from repro.models.config import ModelConfig
+from repro.models.transformer import KVCache, lm_step
+
+
+def _bucket(n: int) -> int:
+    b = 32
+    while b < n:
+        b *= 2
+    return b
+
+
+class JaxBackend:
+    name = "jax"
+
+    def __init__(self, cfg: ModelConfig, *, max_slots: int = 8,
+                 max_len: int = 1024, seed: int = 0, dtype=jnp.float32):
+        assert cfg.family in ("dense", "moe"), "live runner serves LM families"
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.params = model_zoo.init(cfg, jax.random.PRNGKey(seed), dtype)
+        self.cache = model_zoo.cache_zeros(cfg, max_slots, max_len, dtype)
+        self._slots: Dict[int, int] = {}          # sid -> slot
+        self._free_slots = list(range(max_slots))
+
+        def _decode(params, cache, tokens, positions):
+            logits, cache = lm_step(cfg, params, cache, tokens[:, None],
+                                    positions[:, None])
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        def _prefill(params, cache, tokens, positions, slot, last_idx):
+            # single-slot chunked prefill: slice the slot's cache region,
+            # step, write back. tokens/positions: (1, C).
+            ks = jax.lax.dynamic_slice_in_dim(cache.k, slot, 1, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(cache.v, slot, 1, axis=1)
+            logits, sub = lm_step(cfg, params, KVCache(ks, vs), tokens,
+                                  positions)
+            k = jax.lax.dynamic_update_slice_in_dim(cache.k, sub.k, slot, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache.v, sub.v, slot, axis=1)
+            nxt = jnp.argmax(logits[0, last_idx], axis=-1).astype(jnp.int32)
+            return nxt, KVCache(k, v)
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
+        self._calibrate()
+
+    # --- slots ------------------------------------------------------------
+    def _slot_of(self, sid: int) -> int:
+        if sid not in self._slots:
+            assert self._free_slots, "live runner out of slots"
+            self._slots[sid] = self._free_slots.pop()
+        return self._slots[sid]
+
+    def release_session(self, sid: int) -> None:
+        slot = self._slots.pop(sid, None)
+        if slot is not None:
+            self._free_slots.append(slot)
+
+    # --- oracle (calibrated) -----------------------------------------------
+    def _time_once(self, fn) -> float:
+        fn()                                      # compile
+        t0 = time.monotonic()
+        fn()
+        return max(1e-6, time.monotonic() - t0)
+
+    def _calibrate(self) -> None:
+        toks = jnp.zeros((1, 64), jnp.int32)
+        pos = jnp.arange(64, dtype=jnp.int32)[None]
+
+        def pf():
+            nxt, self.cache = self._prefill_fn(self.params, self.cache, toks,
+                                               pos, 0, 63)
+            nxt.block_until_ready()
+
+        self._prefill_s_per_tok = self._time_once(pf) / 64
+        tok1 = jnp.zeros((self.max_slots,), jnp.int32)
+        pos1 = jnp.full((self.max_slots,), self.max_len - 1, jnp.int32)
+
+        def df():
+            nxt, self.cache = self._decode_fn(self.params, self.cache, tok1,
+                                              pos1)
+            nxt.block_until_ready()
+
+        self._decode_s_per_step = self._time_once(df)
+
+    def recompute_time(self, n_tokens: int) -> float:
+        return n_tokens * self._prefill_s_per_tok
+
+    def prefill_rate(self) -> float:
+        return 1.0 / self._prefill_s_per_tok
+
+    def swap_time(self, n_tokens: int) -> float:
+        return 1e9   # live runner does not implement host offload
+
+    # --- execution ------------------------------------------------------------
+    def run_batch(self, work: BatchWork, now: float) -> float:
+        if work.empty:
+            return 0.0
+        t0 = time.monotonic()
+        for s, chunk in work.prefills:
+            self._run_prefill(s, chunk)
+        if work.decodes:
+            self._run_decodes(work.decodes)
+        return time.monotonic() - t0
+
+    # ------------------------------------------------------------------
+    def _context_ids(self, s: Session) -> List[int]:
+        ids = s.meta.setdefault("context_ids", [])
+        target = s.prefill_target
+        rng = np.random.default_rng(s.sid)
+        while len(ids) < target:
+            ids.append(int(rng.integers(2, self.cfg.vocab_size)))
+        return ids
+
+    def _run_prefill(self, s: Session, chunk: int) -> None:
+        slot = self._slot_of(s.sid)
+        ids = self._context_ids(s)
+        start = s.resident_len
+        segment = ids[start:start + chunk]
+        b = _bucket(len(segment))
+        toks = np.zeros((1, b), np.int32)
+        toks[0, :len(segment)] = segment
+        pos = np.arange(start, start + b, dtype=np.int32)
+        # padded lanes park at the scratch position
+        pos[len(segment):] = self.max_len - 1
+        nxt, self.cache = self._prefill_fn(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(pos[None]), slot, len(segment) - 1)
+        s.meta["next_token"] = int(nxt)
+
+    def _run_decodes(self, decodes: List[Tuple[Session, int]]) -> None:
+        g_max = max(g for _, g in decodes)
+        scratch = self.max_len - 1
+        for step in range(g_max):
+            toks = np.zeros((self.max_slots,), np.int32)
+            pos = np.full((self.max_slots,), scratch, np.int32)
+            live = []
+            for s, g in decodes:
+                if step >= g:
+                    continue
+                slot = self._slot_of(s.sid)
+                toks[slot] = s.meta.get("next_token", 1)
+                pos[slot] = s.resident_len + step
+                live.append((s, slot))
+            if not live:
+                break
+            nxt, self.cache = self._decode_fn(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+            nxt = np.asarray(nxt)
+            for s, slot in live:
+                tok = int(nxt[slot])
+                s.meta.setdefault("generated", []).append(tok)
+                s.meta["next_token"] = tok
+                s.meta.setdefault("context_ids", []).append(tok)

@@ -1,0 +1,135 @@
+"""Host-side tool execution (the CPU plane).
+
+``SimToolExecutor`` models co-located tool execution on a bounded number of
+host CPU slots under a virtual clock: invocations beyond capacity *queue*
+(this backlog is exactly the coupled-pressure signal MARS consumes).
+``RealToolExecutor`` runs actual callables on a thread pool for the live
+engine/examples. Both emit the same unified-info-stream events.
+"""
+from __future__ import annotations
+
+import heapq
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional, Tuple
+
+from repro.core import events as ev
+from repro.core.events import EventBus
+from repro.core.session import Session
+
+
+class SimToolExecutor:
+    def __init__(self, cpu_slots: int, bus: EventBus):
+        self.cpu_slots = cpu_slots
+        self.bus = bus
+        self._running: List[Tuple[float, int, Session]] = []   # (end, seq, s)
+        self._waiting: List[Tuple[float, int, Session, float, str]] = []
+        self._seq = 0
+
+    def start(self, s: Session, kind: str, duration: float, now: float) -> None:
+        self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind)
+        self._seq += 1
+        if len(self._running) < self.cpu_slots:
+            self._begin(s, kind, duration, now)
+        else:
+            self._waiting.append((now, self._seq, s, duration, kind))
+
+    def _begin(self, s: Session, kind: str, duration: float, now: float) -> None:
+        s.tool_started = now
+        s.meta["tool_kind_running"] = kind
+        s.meta["tool_duration"] = duration
+        self.bus.emit(ev.TOOL_START, now, s.sid, kind=kind)
+        heapq.heappush(self._running, (now + duration, self._seq, s))
+
+    def poll(self, now: float) -> List[Session]:
+        """Tools completed by ``now``; starts queued tools as slots free up."""
+        done: List[Session] = []
+        while self._running and self._running[0][0] <= now:
+            end, _, s = heapq.heappop(self._running)
+            self.bus.emit(ev.TOOL_END, end, s.sid,
+                          kind=s.meta.get("tool_kind_running", "default"),
+                          duration=s.meta.get("tool_duration", 0.0))
+            done.append(s)
+            if self._waiting:
+                t0, seq, w, dur, kind = self._waiting.pop(0)
+                self._begin(w, kind, dur, end)
+        return done
+
+    def next_event_time(self) -> Optional[float]:
+        return self._running[0][0] if self._running else None
+
+    @property
+    def active(self) -> int:
+        return len(self._running)
+
+    @property
+    def backlog(self) -> int:
+        return len(self._waiting)
+
+
+class RealToolExecutor:
+    """Thread-pool executor for live tool callables (wall clock).
+
+    ``Round.tool_seconds`` is honoured via sleep when no callable is given in
+    ``session.meta['tool_fns'][round]`` — used by the live-engine examples.
+    """
+
+    def __init__(self, cpu_slots: int, bus: EventBus):
+        self.cpu_slots = cpu_slots
+        self.bus = bus
+        self._pool = ThreadPoolExecutor(max_workers=cpu_slots)
+        self._done: "queue.Queue[Session]" = queue.Queue()
+        self._active = 0
+        self._lock = threading.Lock()
+        self._t0 = time.monotonic()
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def start(self, s: Session, kind: str, duration: float, now: float) -> None:
+        self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind)
+        fn: Optional[Callable] = None
+        fns = s.meta.get("tool_fns")
+        if fns:
+            fn = fns.get(s.cur_round)
+
+        def _run():
+            with self._lock:
+                self._active += 1
+            t_start = self._now()
+            s.tool_started = t_start
+            self.bus.emit(ev.TOOL_START, t_start, s.sid, kind=kind)
+            try:
+                if fn is not None:
+                    fn()
+                else:
+                    time.sleep(duration)
+            finally:
+                t_end = self._now()
+                with self._lock:
+                    self._active -= 1
+                self.bus.emit(ev.TOOL_END, t_end, s.sid, kind=kind,
+                              duration=t_end - t_start)
+                self._done.put(s)
+
+        self._pool.submit(_run)
+
+    def poll(self, now: float) -> List[Session]:
+        out = []
+        while True:
+            try:
+                out.append(self._done.get_nowait())
+            except queue.Empty:
+                return out
+
+    def next_event_time(self) -> Optional[float]:
+        return None
+
+    @property
+    def active(self) -> int:
+        return self._active
+
+    def shutdown(self):
+        self._pool.shutdown(wait=False)

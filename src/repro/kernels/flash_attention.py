@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (prefill/train hot path).
+
+Supports causal masking, sliding-window (gemma2 local layers), logit softcap,
+GQA, and chunked-prefill query offsets. Online-softmax accumulation runs in
+VMEM scratch across the innermost (sequential) kv-block grid dimension;
+block shapes are MXU/VREG aligned (multiples of (8,128) in f32).
+
+TARGET is TPU; on this CPU container the kernel is executed (and tested
+against ``ref.flash_attention_ref``) with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], q_offset: int, block_q: int,
+            block_k: int, n_kv_blocks: int):
+    """Grid: (B, Hkv, n_q_blocks, n_kv_blocks); each block carries the G
+    query heads of one KV head.
+
+    q_ref/o_ref: (G, block_q, D); k_ref/v_ref: (block_k, D);
+    scratch: m/l (G, block_q, 1) f32, acc (G, block_q, D) f32.
+    """
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(F32) * scale            # (G, bq, D)
+    k = k_ref[...].astype(F32)                    # (bk, D)
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=F32)   # (G, bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_q, block_k), 1)
+    kv_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_q, block_k), 2)
+    mask = jnp.ones((1, block_q, block_k), bool)
+    if causal:
+        mask = kv_pos <= q_pos
+    if window is not None:
+        mask = mask & (q_pos - kv_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # (G, bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v_ref[...].astype(F32),
+                             (((2,), (0,)), ((), ())),
+                             preferred_element_type=F32)  # (G, bq, D)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    n_q = Sq // block_q
+    n_kv = Skv // block_k
+    qg = q.reshape(B, Hkv, G, Sq, D)
+
+    kernel = functools.partial(
+        _kernel, scale=D ** -0.5, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, block_q=block_q, block_k=block_k,
+        n_kv_blocks=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, None, G, block_q, D),
+                         lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((None, None, block_k, D),
+                         lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((None, None, block_k, D),
+                         lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, block_q, D),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, block_q, 1), F32),
+            pltpu.VMEM((G, block_q, 1), F32),
+            pltpu.VMEM((G, block_q, D), F32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(B, Hq, Sq, D)

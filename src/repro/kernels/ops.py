@@ -1,0 +1,65 @@
+"""Public kernel entry points with platform dispatch.
+
+On TPU the Pallas kernels run compiled (``interpret=False``); everywhere else
+they run in interpret mode or fall back to the jnp oracle. Model code calls
+these wrappers, never ``pl.pallas_call`` directly.
+
+    attention(...)        prefill/train attention (flash kernel | oracle)
+    decode_attention(...) paged decode attention (paged kernel | oracle)
+    wkv(...)              RWKV6 recurrence        (wkv6 kernel | oracle)
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:                              # pragma: no cover
+        return False
+
+
+def _use_kernels(override: Optional[bool]) -> bool:
+    if override is not None:
+        return override
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return _on_tpu()
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, q_offset: int = 0,
+              use_kernel: Optional[bool] = None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D)."""
+    if _use_kernels(use_kernel):
+        return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                      q_offset=q_offset, interpret=not _on_tpu())
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, q_offset=q_offset)
+
+
+def decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                     use_kernel: Optional[bool] = None):
+    """q: (B, Hq, D); pages: (P, page, Hkv, D); table: (B, max_pages)."""
+    if _use_kernels(use_kernel):
+        return _paged(q, k_pages, v_pages, block_table, lengths,
+                      interpret=not _on_tpu())
+    return _ref.paged_attention_ref(q, k_pages, v_pages, block_table, lengths)
+
+
+def wkv(r, k, v, w, u, state, *, chunk: int = 32,
+        use_kernel: Optional[bool] = None):
+    if _use_kernels(use_kernel):
+        return _wkv6(r, k, v, w, u, state, chunk=chunk,
+                     interpret=not _on_tpu())
+    return _ref.wkv6_ref(r, k, v, w, u, state)

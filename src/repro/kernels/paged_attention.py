@@ -1,0 +1,103 @@
+"""Pallas TPU paged attention (decode hot path).
+
+vLLM-style block-table indirection, adapted to TPU: the block table and
+per-request lengths are *scalar-prefetched* so the KV page index_map can
+steer HBM->VMEM DMA directly from the table (no gather materialization).
+Online-softmax accumulates across the sequential page-grid dimension in
+VMEM scratch. Page size defaults to 32 tokens so a (page, head_dim) tile is
+VREG-aligned on TPU (the repo-wide adaptation noted in DESIGN.md §3).
+
+TARGET is TPU; validated on CPU with ``interpret=True`` against
+``ref.paged_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, page: int, n_pages: int):
+    """Grid: (B, max_pages). q_ref/o_ref: (Hkv, G, D); k/v_ref: (page, Hkv, D)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(F32) * scale                    # (Hkv, G, D)
+    k = k_ref[...].astype(F32)                            # (page, Hkv, D)
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (1,))),
+                            preferred_element_type=F32)   # (Hkv, G, page)
+    kv_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    valid = kv_pos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # (Hkv, G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v_ref[...].astype(F32),
+                             (((2,), (0,)), ((0,), (1,))),
+                             preferred_element_type=F32)  # (Hkv, G, D)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    interpret: bool = True):
+    """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D);
+    block_table: (B, max_pages) int32; lengths: (B,) int32 -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+
+    def q_map(b, j, table, lens):
+        return (b, 0, 0, 0)
+
+    def kv_map(b, j, table, lens):
+        return (table[b, j], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((None, Hkv, G, D), q_map),
+            pl.BlockSpec((None, page, Hkv, D), kv_map),
+            pl.BlockSpec((None, page, Hkv, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((None, Hkv, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G, 1), F32),
+            pltpu.VMEM((Hkv, G, 1), F32),
+            pltpu.VMEM((Hkv, G, D), F32),
+        ],
+    )
+    kernel = functools.partial(_kernel, scale=D ** -0.5, page=page,
+                               n_pages=max_pages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

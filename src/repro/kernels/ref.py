@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` and are also the default math path on CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        q_offset: int = 0):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D). Returns (B, Hq, Sq, D).
+
+    ``q_offset`` positions the queries at kv index ``q_offset + i``
+    (chunked prefill: queries are the tail of the kv sequence).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qf = q.astype(F32).reshape(B, Hkv, G, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(F32)) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(k.shape[2])
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask = kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(F32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths):
+    """Decode attention over paged KV.
+
+    q: (B, Hq, D); k_pages/v_pages: (P, page, Hkv, D);
+    block_table: (B, max_pages) int32; lengths: (B,) int32 (valid kv tokens).
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = Hq // Hkv
+    k = k_pages[block_table]                     # (B, max_pages, page, Hkv, D)
+    v = v_pages[block_table]
+    k = k.reshape(B, max_pages * page, Hkv, D)
+    v = v.reshape(B, max_pages * page, Hkv, D)
+    qf = q.astype(F32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(F32)) * (D ** -0.5)
+    valid = jnp.arange(max_pages * page)[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(F32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """Sequential WKV6 recurrence (the mathematical definition).
+
+    r/k/v/w: (B, T, H, K); u: (H, K); state: (B, H, K, K) f32.
+    Returns (o (B, T, H, K) f32, final state).
+        o_t = r_t @ S_{t-1} + (r_t . (u*k_t)) v_t
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    rf, kf, vf, wf = (a.astype(F32) for a in (r, k, v, w))
+    uf = u.astype(F32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                      # (B, H, K)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S) + \
+            jnp.einsum("bhk,bhk->bh", rt, uf[None] * kt)[..., None] * vt
+        S = wt[..., None] * S + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S, os_ = jax.lax.scan(step, state.astype(F32), xs)
+    return jnp.moveaxis(os_, 0, 1), S

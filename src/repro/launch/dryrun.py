@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+MUST be the process entry point (the XLA flag above is read at first jax
+init, before any other import). For each cell it lowers the appropriate step
+with sharded ShapeDtypeStruct inputs on the production mesh, compiles it,
+and records memory_analysis / cost_analysis / per-device collective bytes
+(parsed from the post-SPMD HLO) into a JSON report for the roofline pass.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b \
+        --shape train_4k [--multi-pod] [--out report.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, cell_is_supported, get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed.steps import build_cell
+from repro.launch.mesh import make_production_mesh
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective kind, from post-SPMD HLO.
+
+    The compiled module is per-partition, so summed operand sizes are
+    per-device traffic. Counts the *output* shape of each collective op
+    (all-reduce: payload; all-gather: gathered result; etc.)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in s or f" {k}-start(" in s:
+                kind = k
+                break
+        if kind is None:
+            continue
+        # output shape(s) sit between '=' and the op name:
+        #   "%ar = bf16[4,128]{1,0} all-reduce(...)"
+        head = s.split("=", 1)[1].split(kind)[0]
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    ok, why = cell_is_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": dict(zip(mesh.axis_names,
+                                  [int(mesh.shape[a]) for a in mesh.axis_names])),
+                 "n_devices": int(mesh.size)}
+    try:
+        fn, args, jkw = build_cell(cfg, spec, mesh)
+        with mesh:
+            lowered = jax.jit(fn, **jkw).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        if cost:
+            rec["flops"] = float(cost.get("flops", 0.0))
+            rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["status"] = "ok"
+    except Exception as e:                         # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" flops={rec.get('flops', 0):.3e}"
+                     f" argB={rec.get('argument_size_in_bytes', 0):.3e}"
+                     f" tmpB={rec.get('temp_size_in_bytes', 0):.3e}"
+                     f" collB={rec['collectives']['total']:.3e}"
+                     f" compile={rec.get('compile_s')}s")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"{'multi-pod' if multi_pod else 'single-pod'}: {status}{extra}",
+              flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"[dryrun] mesh: {dict(zip(mesh.axis_names, [mesh.shape[a] for a in mesh.axis_names]))} "
+          f"({mesh.size} devices, backend={jax.default_backend()})", flush=True)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    records = []
+    for a, s in cells:
+        records.append(run_cell(a, s, multi_pod=args.multi_pod, mesh=mesh))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    n_err = sum(1 for r in records if r["status"] == "error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,127 @@
+import os
+os.environ["REPRO_UNROLL_SCANS"] = "1"
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=" +
+                               os.environ.get("REPRO_DRYRUN_DEVICES", "256")).strip()
+
+"""Depth-extrapolated roofline probe.
+
+XLA's cost_analysis counts while-loop bodies ONCE, so the rolled-scan dry-run
+under-reports in-loop flops/bytes/collectives. This probe compiles each
+(arch x shape) cell at two REDUCED depths with every scan UNROLLED
+(REPRO_UNROLL_SCANS=1), fits the exactly-linear-in-depth cost model
+
+    cost(L) = fixed + L * per_layer
+
+and extrapolates to the full architecture depth. Emits the same record
+schema as launch/dryrun.py so launch/roofline.py consumes either.
+
+    PYTHONPATH=src python -m repro.launch.roofline_probe --all --out probe.json
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, Optional, Tuple
+
+from repro.configs.registry import ARCH_IDS, cell_is_supported, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+_FIELDS = ("flops", "bytes_accessed")
+
+
+def _probe_depths(cfg) -> Tuple[int, int, int]:
+    """(L1, L2, full_L) chosen so layer patterns stay representative."""
+    if cfg.family == "zamba2":
+        k = cfg.shared_attn_every
+        return k, 2 * k, cfg.n_layers
+    step = len(cfg.layer_pattern)
+    return 2 * step, 4 * step, cfg.n_layers
+
+
+def _with_depth(cfg, L: int):
+    if cfg.family == "whisper":
+        # encoder and decoder scale together
+        frac = L / cfg.n_layers
+        return dataclasses.replace(cfg, n_layers=L,
+                                   n_enc_layers=max(1, round(cfg.n_enc_layers * frac)))
+    return dataclasses.replace(cfg, n_layers=L)
+
+
+def _extract(rec: Dict) -> Optional[Dict[str, float]]:
+    if rec.get("status") != "ok":
+        return None
+    out = {f: rec.get(f, 0.0) for f in _FIELDS}
+    for k, v in rec.get("collectives", {}).items():
+        out[f"coll_{k}"] = v
+    return out
+
+
+def probe_cell(arch: str, shape_name: str, mesh, registry_patch) -> Dict:
+    cfg = get_config(arch)
+    ok, why = cell_is_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    L1, L2, Lf = _probe_depths(cfg)
+    costs = {}
+    for L in (L1, L2):
+        registry_patch[arch] = _with_depth(cfg, L)
+        rec = run_cell(arch, shape_name, mesh=mesh, verbose=False)
+        registry_patch.pop(arch, None)
+        c = _extract(rec)
+        if c is None:
+            rec.update({"arch": arch, "shape": shape_name, "probe_depth": L})
+            return rec
+        costs[L] = c
+    out = {"arch": arch, "shape": shape_name, "status": "ok",
+           "n_devices": int(mesh.size),
+           "probe_depths": [L1, L2, Lf], "collectives": {}}
+    for key in costs[L1]:
+        per_layer = (costs[L2][key] - costs[L1][key]) / (L2 - L1)
+        fixed = costs[L1][key] - L1 * per_layer
+        val = max(0.0, fixed + Lf * per_layer)
+        if key.startswith("coll_"):
+            out["collectives"][key[5:]] = val
+        else:
+            out[key] = val
+    print(f"[probe] {arch} x {shape_name}: flops={out.get('flops', 0):.3e} "
+          f"bytes={out.get('bytes_accessed', 0):.3e} "
+          f"coll={out['collectives'].get('total', 0):.3e}", flush=True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    # patch the registry so run_cell sees the reduced-depth config
+    import repro.configs.registry as registry
+    patch: Dict = {}
+    orig_get = registry.get_config
+    registry.get_config = lambda a: patch.get(a, orig_get(a))
+    import repro.launch.dryrun as dryrun
+    dryrun.get_config = registry.get_config
+
+    mesh = make_production_mesh(multi_pod=False)
+    cells = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    records = []
+    for a, s in cells:
+        records.append(probe_cell(a, s, mesh, patch))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[probe] wrote {args.out}")
+    return 1 if any(r["status"] == "error" for r in records) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

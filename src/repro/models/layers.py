@@ -1,0 +1,373 @@
+"""Shared functional layers: norms, RoPE, GQA attention, (gated) MLP, MoE.
+
+Everything is a pure function of ``(params, inputs)``; parameter pytrees are
+plain dicts so layer stacks can be scanned with ``jax.lax.scan``. All matmuls
+accumulate in float32 (``preferred_element_type``) so bf16 weights are safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.scan_util import scan as _uscan
+
+Params = Dict[str, Any]
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Mesh axis names for the distributed step builders.
+
+    ``None`` mesh means single-device execution (smoke tests / CPU engine).
+    """
+    mesh: Any = None
+    dp_axes: Tuple[str, ...] = ()     # batch axes, e.g. ('pod', 'data')
+    tp_axis: Optional[str] = None     # tensor-parallel axis ('model')
+    ep_axis: Optional[str] = None     # expert-parallel axis ('data')
+    sp_axis: Optional[str] = None     # KV-sequence-parallel axis for long decode
+
+    @property
+    def dp_spec(self):
+        return self.dp_axes if self.dp_axes else None
+
+
+def constrain(x, pctx: Optional[ParallelCtx], *spec):
+    """with_sharding_constraint if running under a mesh, else identity."""
+    if pctx is None or pctx.mesh is None:
+        return x
+    return lax.with_sharding_constraint(x, jax.sharding.NamedSharding(pctx.mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    y = x.astype(F32) * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale.astype(F32)) * y).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32) + bias.astype(F32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, dim: int, dtype) -> Params:
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    return {"scale": jnp.zeros((dim,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions[..., None].astype(F32) * freq          # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / softcap), dense-KV formulation
+# ---------------------------------------------------------------------------
+
+def attention_scores_mask(q_pos, kv_pos, *, causal: bool, window: Optional[int],
+                          kv_valid=None):
+    """Boolean mask (..., Sq, Skv); True = attend."""
+    m = jnp.ones(q_pos.shape[-1:] + kv_pos.shape[-1:], dtype=bool)
+    if causal:
+        m = kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m = m & (q_pos[..., :, None] - kv_pos[..., None, :] < window)
+    if kv_valid is not None:
+        m = m & kv_valid[..., None, :]
+    return m
+
+
+def mha(q, k, v, mask, *, softcap: Optional[float] = None, scale: Optional[float] = None):
+    """Grouped-query attention without materializing repeated KV.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); mask: (B, Sq, Skv) or (Sq, Skv).
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(F32), k.astype(F32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(F32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _block_mask(q_pos, kv_pos, kv_valid, *, causal: bool,
+                window: Optional[int], is_local):
+    """Mask for one q block, computed lazily from positions (never a full
+    (Sq, Skv) tensor). q_pos: (B, Cq); kv_pos: (B, Skv)."""
+    if causal:
+        m = kv_pos[:, None, :] <= q_pos[..., None]
+    else:
+        m = jnp.ones(q_pos.shape + kv_pos.shape[-1:], bool)
+    if window is not None:
+        w = q_pos[..., None] - kv_pos[:, None, :] < window
+        if is_local is not None:
+            w = w | (is_local < 0.5)
+        m = m & w
+    if kv_valid is not None:
+        m = m & kv_valid[:, None, :]
+    return m
+
+
+def attention(q, k, v, q_pos, kv_pos, *, kv_valid=None, causal: bool = True,
+              window: Optional[int] = None, is_local=None,
+              softcap: Optional[float] = None, q_chunk: int = 2048):
+    """Position-driven GQA attention, blocked over the query dimension so the
+    score/mask working set is O(q_chunk * Skv), not O(Sq * Skv) — the XLA
+    analogue of the Pallas flash kernel's tiling (long-prefill memory term).
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); q_pos: (B, Sq); kv_pos: (B, Skv).
+    ``is_local``: traced 0/1 scalar toggling the sliding window (gemma2
+    alternation under scan-over-layers).
+    """
+    B, Sq, H, D = q.shape
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        mask = _block_mask(q_pos, kv_pos, kv_valid, causal=causal,
+                           window=window, is_local=is_local)
+        return mha(q, k, v, mask, softcap=softcap)
+    nb = Sq // q_chunk
+    qb = jnp.moveaxis(q.reshape(B, nb, q_chunk, H, D), 1, 0)
+    pb = jnp.moveaxis(q_pos.reshape(B, nb, q_chunk), 1, 0)
+
+    def body(_, xs):
+        qi, pi = xs
+        mask = _block_mask(pi, kv_pos, kv_valid, causal=causal,
+                           window=window, is_local=is_local)
+        return None, mha(qi, k, v, mask, softcap=softcap)
+
+    _, ob = _uscan(body, None, (qb, pb))
+    return jnp.moveaxis(ob, 0, 1).reshape(B, Sq, H, D)
+
+
+def init_attn(cfg: ModelConfig, key, dtype) -> Params:
+    D = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = D ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (D, cfg.q_dim), dtype) * s,
+        "wk": jax.random.normal(k2, (D, cfg.kv_dim), dtype) * s,
+        "wv": jax.random.normal(k3, (D, cfg.kv_dim), dtype) * s,
+        "wo": jax.random.normal(k4, (cfg.q_dim, D), dtype) * (cfg.q_dim ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def attn_qkv(cfg: ModelConfig, p: Params, x, positions, *, use_rope=True):
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"], preferred_element_type=F32)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(F32)
+        k = k + p["bk"].astype(F32)
+        v = v + p["bv"].astype(F32)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim_).astype(x.dtype)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim_).astype(x.dtype)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim_).astype(x.dtype)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p: Params, o):
+    B, S, H, Dh = o.shape
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * Dh), p["wo"],
+                      preferred_element_type=F32).astype(o.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+            "gelu_tanh": partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None) -> Params:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": jax.random.normal(k2, (D, F), dtype) * D ** -0.5,
+         "w_down": jax.random.normal(k3, (F, D), dtype) * F ** -0.5}
+    if cfg.gated_mlp:
+        p["w_gate"] = jax.random.normal(k1, (D, F), dtype) * D ** -0.5
+    return p
+
+
+def mlp(cfg: ModelConfig, p: Params, x, pctx: Optional[ParallelCtx] = None):
+    act = _act(cfg.act)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"], preferred_element_type=F32)
+    if cfg.gated_mlp:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"], preferred_element_type=F32)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = h.astype(x.dtype)
+    if pctx is not None:
+        h = constrain(h, pctx, pctx.dp_spec, None, pctx.tp_axis)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE: capacity-based dispatch (GShard-style, scatter formulation)
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, key, dtype) -> Params:
+    assert cfg.moe is not None
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(k0, (D, E), dtype) * D ** -0.5,
+        "w_gate": jax.random.normal(k1, (E, D, F), dtype) * D ** -0.5,
+        "w_up": jax.random.normal(k2, (E, D, F), dtype) * D ** -0.5,
+        "w_down": jax.random.normal(k3, (E, F, D), dtype) * F ** -0.5,
+    }
+
+
+def _route(moe: MoEConfig, logits):
+    """logits (T, E) -> (topk_idx (T,K), topk_w (T,K) normalized)."""
+    probs = jax.nn.softmax(logits.astype(F32), axis=-1)
+    w, idx = lax.top_k(probs, moe.top_k)
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    return idx, w
+
+
+def _dispatch(x, idx, w, num_experts: int, capacity: int):
+    """Scatter tokens into per-expert capacity buffers.
+
+    x: (T, D); idx/w: (T, K). Returns buf (E, C, D), and gather metadata.
+    Memory O(T*K*E/8 + E*C*D) — no (T, E, C) one-hot tensor.
+    """
+    T, D = x.shape
+    K = idx.shape[1]
+    flat_e = idx.reshape(-1)                                   # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)
+    # log-depth scan, NOT jnp.cumsum: XLA lowers big cumsums to a quadratic
+    # reduce-window on some backends (O(T^2 E) flops for repo-scale token
+    # counts); associative_scan is O(T log T) everywhere.
+    ranks = lax.associative_scan(jnp.add, onehot, axis=0) * onehot
+    pos = jnp.sum(ranks, axis=-1) - 1                          # (T*K,)
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, capacity)                     # overflow -> dumped row
+    buf = jnp.zeros((num_experts, capacity + 1, D), x.dtype)
+    src = jnp.repeat(x, K, axis=0)                             # (T*K, D)
+    buf = buf.at[flat_e, pos_c].add(src)
+    return buf[:, :capacity], (flat_e, pos_c, keep)
+
+
+def _combine(expert_out, meta, w, T: int):
+    flat_e, pos_c, keep = meta
+    K = w.shape[1]
+    E, C, D = expert_out.shape
+    padded = jnp.concatenate([expert_out, jnp.zeros((E, 1, D), expert_out.dtype)], axis=1)
+    gathered = padded[flat_e, pos_c]                           # (T*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    gathered = gathered.reshape(T, K, D) * w[..., None].astype(expert_out.dtype)
+    return jnp.sum(gathered, axis=1)
+
+
+def _expert_ffn(cfg: ModelConfig, p: Params, buf):
+    """buf (E, C, D) -> (E, C, D) through per-expert gated MLP."""
+    act = _act(cfg.act)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"], preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"], preferred_element_type=F32)
+    h = (act(g) * u).astype(buf.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                      preferred_element_type=F32).astype(buf.dtype)
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x, pctx=None, token_shard: bool = False):
+    """Single-device / TP-sharded MoE FFN. x: (B, S, D).
+
+    ``token_shard``: with replicated expert weights (moe_replicated perf
+    toggle), shard the flattened token dim over BOTH dp and model axes so the
+    model-axis replicas split the expert work instead of duplicating it."""
+    m = cfg.moe
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    if token_shard and pctx is not None and pctx.mesh is not None:
+        axes = tuple(pctx.dp_axes) + ((pctx.tp_axis,) if pctx.tp_axis else ())
+        xt = constrain(xt, pctx, axes, None)
+    logits = jnp.einsum("td,de->te", xt, p["router"], preferred_element_type=F32)
+    idx, w = _route(m, logits)
+    capacity = max(8, int(B * S * m.top_k / m.num_experts * m.capacity_factor))
+    buf, meta = _dispatch(xt, idx, w, m.num_experts, capacity)
+    out = _expert_ffn(cfg, p, buf)
+    combined = _combine(out, meta, w, B * S)
+    if token_shard and pctx is not None and pctx.mesh is not None:
+        combined = constrain(combined, pctx, tuple(pctx.dp_axes) or None, None)
+    return combined.reshape(B, S, D)
+
+
+def moe_ffn_ep_local(cfg: ModelConfig, p: Params, x, *, ep_axis: str,
+                     tp_axis: Optional[str]):
+    """Per-shard body for expert-parallel MoE (runs under shard_map).
+
+    x: (B_local, S, D) local tokens; p['w_*'] are the local expert shards
+    (E_local, D, F_local); p['router'] replicated.
+    The ``ep_axis`` all_to_all routes capacity buffers so each shard computes
+    only its own experts; tp_axis (if set) shards F with a psum on the way out.
+    """
+    m = cfg.moe
+    n_ep = lax.axis_size(ep_axis)
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    logits = jnp.einsum("td,de->te", xt, p["router"], preferred_element_type=F32)
+    idx, w = _route(m, logits)
+    capacity = max(8, int(B * S * m.top_k / m.num_experts * m.capacity_factor))
+    buf, meta = _dispatch(xt, idx, w, m.num_experts, capacity)   # (E, C, D)
+    # exchange: split E over shards, concat received buffers along C.
+    buf = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1, tiled=True)
+    out = _expert_ffn(cfg, p, buf)                               # (E/n, n*C, D)
+    if tp_axis is not None:
+        out = lax.psum(out, tp_axis)
+    out = lax.all_to_all(out, ep_axis, split_axis=1, concat_axis=0, tiled=True)
+    return _combine(out, meta, w, B * S).reshape(B, S, D)

@@ -1,0 +1,235 @@
+"""Mamba2 (SSD) block — chunked state-space duality formulation.
+
+Recurrence (per head h, head dim P, state dim N):
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * x_t (outer) B_t
+    y_t = S_t @ C_t + D_h * x_t
+Train/prefill run the chunked form (block matmuls + scan over chunks);
+decode runs the single-step recurrence on carried (conv, ssm) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.scan_util import scan as _uscan
+
+F32 = jnp.float32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MambaState:
+    """conv: (..., B, conv_ch, d_conv-1); ssm: (..., B, H, P, N) f32."""
+    conv: jax.Array
+    ssm: jax.Array
+
+    def tree_flatten(self):
+        return (self.conv, self.ssm), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    di = cfg.ssm.d_inner(cfg.d_model)
+    return di + 2 * cfg.ssm.d_state
+
+
+def state_zeros(cfg: ModelConfig, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H, P, N = s.n_heads(cfg.d_model), s.head_dim, s.d_state
+    return MambaState(
+        jnp.zeros((n_layers, batch, conv_channels(cfg), s.d_conv - 1), dtype),
+        jnp.zeros((n_layers, batch, H, P, N), F32))
+
+
+def state_specs(cfg: ModelConfig, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    H, P, N = s.n_heads(cfg.d_model), s.head_dim, s.d_state
+    return MambaState(
+        jax.ShapeDtypeStruct((n_layers, batch, conv_channels(cfg), s.d_conv - 1), dtype),
+        jax.ShapeDtypeStruct((n_layers, batch, H, P, N), F32))
+
+
+def init_mamba_layer(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    """Projection weights are stored per-section (z, x, B, C, dt) rather than
+    packed, so each can carry its own tensor-parallel sharding (a packed
+    in_proj cannot shard cleanly: the section boundaries don't align with
+    model-axis shards)."""
+    D = cfg.d_model
+    s = cfg.ssm
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    sd = D ** -0.5
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "w_z": jax.random.normal(k1, (D, di), dtype) * sd,
+        "w_x": jax.random.normal(k2, (D, di), dtype) * sd,
+        "w_B": jax.random.normal(k4, (D, s.d_state), dtype) * sd,
+        "w_C": jax.random.normal(k5, (D, s.d_state), dtype) * sd,
+        "w_dt": jax.random.normal(k6, (D, H), dtype) * sd,
+        "conv_x_w": jax.random.normal(k3, (di, s.d_conv), dtype) * 0.2,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": jax.random.normal(k3, (2 * s.d_state, s.d_conv), dtype) * 0.2,
+        "conv_bc_b": jnp.zeros((2 * s.d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(F32)),   # A = -exp(A_log)
+        "dt_bias": jnp.full((H,), -4.0, F32),
+        "D_skip": jnp.ones((H,), F32),
+        "w_out": jax.random.normal(k7, (di, D), dtype) * di ** -0.5,
+        "gn_scale": jnp.ones((di,), F32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, state, chunk: int):
+    """x: (B,T,H,P); dt: (B,T,H); A: (H,) negative; Bm/Cm: (B,T,N);
+    state: (B,H,P,N) f32. Returns (y (B,T,H,P) f32, new state)."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    xs = x.astype(F32).reshape(B, nc, chunk, H, P)
+    dts = dt.astype(F32).reshape(B, nc, chunk, H)
+    Bs = Bm.astype(F32).reshape(B, nc, chunk, N)
+    Cs = Cm.astype(F32).reshape(B, nc, chunk, N)
+    Af = A.astype(F32)
+
+    def step(S, xs_c):
+        xc, dtc, Bc, Cc = xs_c                     # (B,C,H,P) (B,C,H) (B,C,N)
+        la = dtc * Af[None, None]                  # per-step log decay (<=0)
+        cum = jnp.cumsum(la, axis=1)               # (B,C,H)
+        # inter-chunk: y_t += exp(cum_t) * C_t @ S^T
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum("bhpn,bcn->bchp", S, Cc)
+        # intra-chunk: y_t += sum_{i<=t} exp(cum_t-cum_i) dt_i (C_t.B_i) x_i
+        half = 0.5 * cum[:, -1:]
+        qd = jnp.exp(cum - half)                   # (B,C,H)
+        kd = jnp.exp(half - cum) * dtc
+        cb = jnp.einsum("bcn,bin->bci", Cc, Bc)    # (B,C,C)
+        ci = jnp.arange(xc.shape[1])
+        tri = ci[None, :] <= ci[:, None]           # inclusive lower triangular
+        att = cb[:, None] * (qd.transpose(0, 2, 1)[..., None] *
+                             kd.transpose(0, 2, 1)[..., None, :])
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhci,bihp->bchp", att, xc)
+        # state update
+        total = cum[:, -1]                         # (B,H)
+        k_dec = jnp.exp(total[:, None] - cum) * dtc          # (B,C,H)
+        S_new = jnp.exp(total)[..., None, None] * S + \
+            jnp.einsum("bch,bchp,bcn->bhpn", k_dec, xc, Bc)
+        return S_new, y_inter + y_intra
+
+    xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (xs, dts, Bs, Cs))
+    state, ys = _uscan(step, state.astype(F32), xs_t)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    return y, state
+
+
+def ssd_step(x, dt, A, Bm, Cm, state):
+    """Single token: x (B,H,P); dt (B,H); Bm/Cm (B,N); state (B,H,P,N)."""
+    xf, dtf, Bf, Cf = (a.astype(F32) for a in (x, dt, Bm, Cm))
+    decay = jnp.exp(dtf * A.astype(F32)[None])                 # (B,H)
+    state = decay[..., None, None] * state + \
+        jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cf)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _project(p, x):
+    """x (..., D) -> (z, xc, Bc, Cc, dt) per-section projections."""
+    f32 = lambda w: jnp.einsum("...d,de->...e", x, w,
+                               preferred_element_type=F32).astype(x.dtype)
+    return f32(p["w_z"]), f32(p["w_x"]), f32(p["w_B"]), f32(p["w_C"]), \
+        f32(p["w_dt"])
+
+
+def _rmsnorm_gated(y, z, scale):
+    yf = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return yf * lax.rsqrt(var + 1e-6) * scale
+
+
+def _causal_conv(u, state, w, b, d_conv: int, T: int):
+    """u (B,T,ch); state (B,ch,d_conv-1) -> (silu(conv(u)), new state)."""
+    pad = jnp.moveaxis(state.astype(u.dtype), -1, 1)           # (B,d_conv-1,ch)
+    up = jnp.concatenate([pad, u], axis=1)
+    new_state = jnp.moveaxis(up[:, -(d_conv - 1):], 1, -1)
+    wf = w.astype(F32)
+    out = sum(up[:, i:i + T].astype(F32) * wf[:, i] for i in range(d_conv))
+    return jax.nn.silu(out + b.astype(F32)).astype(u.dtype), new_state
+
+
+def _causal_conv_step(u, state, w, b):
+    """u (B,ch); state (B,ch,d_conv-1)."""
+    window = jnp.concatenate([state.astype(F32), u.astype(F32)[..., None]],
+                             axis=-1)
+    new_state = window[..., 1:].astype(state.dtype)
+    out = jnp.einsum("bcw,cw->bc", window, w.astype(F32))
+    return jax.nn.silu(out + b.astype(F32)).astype(u.dtype), new_state
+
+
+def mamba_block_full(cfg: ModelConfig, p, x, conv_state, ssm_state):
+    """x (B,T,D) -> (out, (new_conv_state, new_ssm_state))."""
+    s = cfg.ssm
+    B, T, D = x.shape
+    di = s.d_inner(D)
+    H, P, N = s.n_heads(D), s.head_dim, s.d_state
+    z, xc, Bc, Cc, dt = _project(p, x)
+    # causal depthwise conv, applied per section so TP shardings stay intact
+    # (xc is model-sharded on d_inner; B/C are small and replicated)
+    bc = jnp.concatenate([Bc, Cc], axis=-1)                    # (B,T,2N)
+    xc, new_conv_x = _causal_conv(xc, conv_state[..., :di, :], p["conv_x_w"],
+                                  p["conv_x_b"], s.d_conv, T)
+    bc, new_conv_bc = _causal_conv(bc, conv_state[..., di:, :], p["conv_bc_w"],
+                                   p["conv_bc_b"], s.d_conv, T)
+    new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-2)
+    Bc, Cc = jnp.split(bc, [N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])        # (B,T,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B, T, H, P)
+    import os
+    chunk = int(os.environ.get("REPRO_PROBE_CHUNK", 0)) or s.chunk_size
+    chunk = min(chunk, T)
+    assert T % chunk == 0, f"T={T} not divisible by chunk={chunk}"
+    y, new_ssm = ssd_chunked(xh, dt, A, Bc, Cc, ssm_state, chunk)
+    y = y + p["D_skip"][None, None, :, None] * xh.astype(F32)
+    y = _rmsnorm_gated(y.reshape(B, T, di), z, p["gn_scale"])
+    return jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["w_out"]), \
+        (new_conv, new_ssm)
+
+
+def mamba_block_step(cfg: ModelConfig, p, x, conv_state, ssm_state):
+    """Single-token decode. x (B,D)."""
+    s = cfg.ssm
+    B, D = x.shape
+    di = s.d_inner(D)
+    H, P, N = s.n_heads(D), s.head_dim, s.d_state
+    z, xc, Bc, Cc, dt = _project(p, x)
+    bc = jnp.concatenate([Bc, Cc], axis=-1)                    # (B,2N)
+    xc, new_conv_x = _causal_conv_step(xc, conv_state[..., :di, :],
+                                       p["conv_x_w"], p["conv_x_b"])
+    bc, new_conv_bc = _causal_conv_step(bc, conv_state[..., di:, :],
+                                        p["conv_bc_w"], p["conv_bc_b"])
+    new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-2)
+    Bc, Cc = jnp.split(bc, [N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])        # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B, H, P)
+    y, new_ssm = ssd_step(xh, dt, A, Bc, Cc, ssm_state)
+    y = y + p["D_skip"][None, :, None] * xh.astype(F32)
+    y = _rmsnorm_gated(y.reshape(B, di), z, p["gn_scale"])
+    return jnp.einsum("be,ed->bd", y.astype(x.dtype), p["w_out"]), \
+        (new_conv, new_ssm)

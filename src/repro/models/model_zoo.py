@@ -1,0 +1,98 @@
+"""Family dispatcher: one uniform API over all 10 assigned architectures.
+
+    init(cfg, key, dtype)                      -> params
+    forward(cfg, params, batch, pctx)          -> logits   (full sequence)
+    prefill(cfg, params, batch, pctx)          -> (last_logits, cache)
+    decode(cfg, params, cache, tok, pos, pctx) -> (logits, cache)
+    cache_specs(cfg, batch, max_len)           -> ShapeDtypeStruct pytree
+
+``batch`` is a dict: {'tokens': (B,S)} plus optional 'embeds' (VLM patch
+embeddings), 'frames' (audio frame embeddings).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+from repro.models.layers import ParallelCtx
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe"):
+        return transformer.init_lm(cfg, key, dtype)
+    if cfg.family == "rwkv6":
+        return rwkv6.init_rwkv(cfg, key, dtype)
+    if cfg.family == "zamba2":
+        return zamba2.init_zamba(cfg, key, dtype)
+    if cfg.family == "whisper":
+        return whisper.init_whisper(cfg, key, dtype)
+    raise ValueError(cfg.family)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+            pctx: Optional[ParallelCtx] = None, remat: bool = False):
+    if cfg.family in ("dense", "moe"):
+        return transformer.lm_forward(cfg, params, batch["tokens"], pctx=pctx,
+                                      embeds=batch.get("embeds"), remat=remat)
+    if cfg.family == "rwkv6":
+        return rwkv6.rwkv_forward(cfg, params, batch["tokens"], pctx=pctx,
+                                  remat=remat)
+    if cfg.family == "zamba2":
+        return zamba2.zamba_forward(cfg, params, batch["tokens"], pctx=pctx,
+                                    remat=remat)
+    if cfg.family == "whisper":
+        return whisper.whisper_forward(cfg, params, batch["tokens"],
+                                       batch["frames"], pctx=pctx, remat=remat)
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+            pctx: Optional[ParallelCtx] = None):
+    if cfg.family in ("dense", "moe"):
+        return transformer.lm_prefill(cfg, params, batch["tokens"], pctx=pctx,
+                                      embeds=batch.get("embeds"))
+    if cfg.family == "rwkv6":
+        return rwkv6.rwkv_prefill(cfg, params, batch["tokens"], pctx=pctx)
+    if cfg.family == "zamba2":
+        return zamba2.zamba_prefill(cfg, params, batch["tokens"], pctx=pctx)
+    if cfg.family == "whisper":
+        return whisper.whisper_prefill(cfg, params, batch["tokens"],
+                                       batch["frames"], pctx=pctx)
+    raise ValueError(cfg.family)
+
+
+def decode(cfg: ModelConfig, params, cache, tokens, positions, *,
+           pctx: Optional[ParallelCtx] = None):
+    if cfg.family in ("dense", "moe"):
+        return transformer.lm_decode(cfg, params, cache, tokens, positions, pctx=pctx)
+    if cfg.family == "rwkv6":
+        return rwkv6.rwkv_decode(cfg, params, cache, tokens, positions, pctx=pctx)
+    if cfg.family == "zamba2":
+        return zamba2.zamba_decode(cfg, params, cache, tokens, positions, pctx=pctx)
+    if cfg.family == "whisper":
+        return whisper.whisper_decode(cfg, params, cache, tokens, positions, pctx=pctx)
+    raise ValueError(cfg.family)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                enc_len: int = 0):
+    if cfg.family in ("dense", "moe"):
+        return transformer.KVCache.specs(cfg, batch, max_len, dtype)
+    if cfg.family == "rwkv6":
+        return rwkv6.RWKVState.specs(cfg, batch, dtype)
+    if cfg.family == "zamba2":
+        return zamba2.ZambaCache.specs(cfg, batch, max_len, dtype)
+    if cfg.family == "whisper":
+        return whisper.EncDecCache.specs(cfg, batch, max_len,
+                                         enc_len or cfg.n_frontend_tokens, dtype)
+    raise ValueError(cfg.family)
+
+
+def cache_zeros(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                enc_len: int = 0):
+    specs = cache_specs(cfg, batch, max_len, dtype, enc_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)

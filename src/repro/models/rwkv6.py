@@ -1,0 +1,312 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent per-channel decay.
+
+Train/prefill use a TPU-native *chunked* formulation of the WKV6 recurrence
+(MXU-friendly block matmuls + a `lax.scan` over chunks), mathematically equal
+to the token-by-token recurrence used for decode. The Pallas kernel in
+``repro.kernels.wkv6`` implements the same chunked scheme for the hot path;
+``repro.kernels.ref.wkv6_ref`` is the shared oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.scan_util import scan as _uscan
+from repro.models.layers import ParallelCtx, constrain, rms_norm
+
+F32 = jnp.float32
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RWKVState:
+    """att_shift/ffn_shift: (L, B, D); wkv: (L, B, H, K, V) float32."""
+    att_shift: jax.Array
+    ffn_shift: jax.Array
+    wkv: jax.Array
+
+    def tree_flatten(self):
+        return (self.att_shift, self.ffn_shift, self.wkv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+        D = cfg.d_model
+        H = D // cfg.rwkv.head_size
+        K = cfg.rwkv.head_size
+        return cls(jnp.zeros((cfg.n_layers, batch, D), dtype),
+                   jnp.zeros((cfg.n_layers, batch, D), dtype),
+                   jnp.zeros((cfg.n_layers, batch, H, K, K), F32))
+
+    @classmethod
+    def specs(cls, cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+        D = cfg.d_model
+        H = D // cfg.rwkv.head_size
+        K = cfg.rwkv.head_size
+        return cls(jax.ShapeDtypeStruct((cfg.n_layers, batch, D), dtype),
+                   jax.ShapeDtypeStruct((cfg.n_layers, batch, D), dtype),
+                   jax.ShapeDtypeStruct((cfg.n_layers, batch, H, K, K), F32))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    D, r = cfg.d_model, cfg.rwkv.mix_lora
+    dl = cfg.rwkv.decay_lora
+    H = D // cfg.rwkv.head_size
+    ks = jax.random.split(key, 12)
+    s = D ** -0.5
+    return {
+        # time-mix (attention analogue)
+        "mu_x": jnp.full((D,), 0.5, dtype),
+        "mu": jnp.full((5, D), 0.5, dtype),                       # w,k,v,r,g static mixes
+        "mix_A": jax.random.normal(ks[0], (D, 5 * r), dtype) * s,
+        "mix_B": jax.random.normal(ks[1], (5, r, D), dtype) * (r ** -0.5),
+        "w_base": jnp.full((D,), -6.0, F32),                      # decay bias (pre -exp(exp))
+        "decay_A": jax.random.normal(ks[2], (D, dl), dtype) * s,
+        "decay_B": jax.random.normal(ks[3], (dl, D), dtype) * (dl ** -0.5),
+        "u": jax.random.normal(ks[4], (D,), F32) * 0.1,           # current-token bonus
+        "wr": jax.random.normal(ks[5], (D, D), dtype) * s,
+        "wk": jax.random.normal(ks[6], (D, D), dtype) * s,
+        "wv": jax.random.normal(ks[7], (D, D), dtype) * s,
+        "wg": jax.random.normal(ks[8], (D, D), dtype) * s,
+        "wo": jax.random.normal(ks[9], (D, D), dtype) * s,
+        "ln_x_scale": jnp.ones((D,), F32),                        # group-norm over heads
+        "ln1": jnp.zeros((D,), dtype),
+        "ln2": jnp.zeros((D,), dtype),
+        # channel-mix (FFN analogue)
+        "cm_mu_k": jnp.full((D,), 0.5, dtype),
+        "cm_mu_r": jnp.full((D,), 0.5, dtype),
+        "cm_wk": jax.random.normal(ks[10], (D, cfg.d_ff), dtype) * s,
+        "cm_wv": jax.random.normal(ks[11], (cfg.d_ff, D), dtype) * (cfg.d_ff ** -0.5),
+        "cm_wr": jax.random.normal(ks[4], (D, D), dtype) * s,
+    }
+
+
+def init_rwkv(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), dtype)
+                 * cfg.d_model ** -0.5,
+        "layers": jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys),
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+                   * cfg.d_model ** -0.5,
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6 chunked recurrence
+#   S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  o_t = r_t @ S_{t-1} + (r_t . (u*k_t)) v_t
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, w, u, state, chunk: int = 32):
+    """r,k,v,w: (B, T, H, K) [w in (0,1)]; u: (H, K); state: (B, H, K, K) f32.
+
+    Returns (o (B,T,H,K) f32, new state). T must be a multiple of ``chunk``.
+
+    Numerics: the intra-chunk term factors exp(cum_{t-1}-cum_i) into
+    exp(cum_{t-1})*exp(-cum_i); each factor is centred by half the chunk's
+    total log-decay so neither overflows f32 even for strong decay
+    (|log w| <= ~1.5 per step is guaranteed by the clip in ``_decay``).
+    """
+    B, T, H, K = r.shape
+    n_chunks = T // chunk
+    rs = r.astype(F32).reshape(B, n_chunks, chunk, H, K)
+    ks_ = k.astype(F32).reshape(B, n_chunks, chunk, H, K)
+    vs = v.astype(F32).reshape(B, n_chunks, chunk, H, K)
+    lw = jnp.log(jnp.clip(w.astype(F32), 1e-12, 1.0)).reshape(B, n_chunks, chunk, H, K)
+    uf = u.astype(F32)
+
+    def chunk_step(S, xs):
+        rc, kc, vc, lwc = xs                       # (B, C, H, K)
+        cum = jnp.cumsum(lwc, axis=1)              # inclusive decay logs
+        # inter-chunk: o_t += (r_t * decay(0..t-1)) @ S
+        r_dec = rc * jnp.exp(cum - lwc)            # decay excludes current step
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, S)
+        # intra-chunk (strictly lower triangular):
+        #   att[t,i] = sum_k r_t[k] k_i[k] exp(cum_{t-1}[k] - cum_i[k])
+        half = 0.5 * cum[:, -1:]                   # centring offset (B,1,H,K)
+        q_ = rc * jnp.exp(cum - lwc - half)        # (B,C,H,K)
+        k_ = kc * jnp.exp(half - cum)
+        att = jnp.einsum("bchk,bihk->bhci", q_, k_)
+        ti = jnp.arange(chunk)
+        tri = ti[None, :] < ti[:, None]            # strictly lower triangular
+        # where (not multiply): masked entries can overflow to inf for large
+        # chunks; inf * 0 would poison the output with NaNs.
+        att = jnp.where(tri[None, None], att, 0.0)
+        o_intra = jnp.einsum("bhci,bihv->bchv", att, vc)
+        # current-token bonus
+        bonus = jnp.einsum("bchk,bchk->bch", rc, uf[None, None] * kc)
+        o_cur = bonus[..., None] * vc
+        o = o_inter + o_intra + o_cur
+        # state update: S' = diag(prod w) S + sum_i decay(i+1..C-1) k_i v_i^T
+        total = cum[:, -1]                         # (B, H, K)
+        k_dec = kc * jnp.exp(total[:, None] - cum)
+        S_new = jnp.exp(total)[..., None] * S + jnp.einsum("bchk,bchv->bhkv", k_dec, vc)
+        return S_new, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks_, vs, lw))
+    state, outs = _uscan(chunk_step, state.astype(F32), xs)
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, T, H, K)
+    return o, state
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """Single-token recurrence. r,k,v,w: (B, H, K); state (B, H, K, K) f32."""
+    rf, kf, vf, wf = (a.astype(F32) for a in (r, k, v, w))
+    o = jnp.einsum("bhk,bhkv->bhv", rf, state) \
+        + jnp.einsum("bhk,bhk->bh", rf, u.astype(F32)[None] * kf)[..., None] * vf
+    state = wf[..., None] * state + jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    return o, state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _dyn_mix(p, x, dx):
+    """5-way data-dependent token-shift mix -> dict of mixed inputs."""
+    base = x + dx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", base, p["mix_A"],
+                               preferred_element_type=F32))
+    r5 = lora.reshape(*lora.shape[:-1], 5, -1)
+    offs = jnp.einsum("btnr,nrd->nbtd", r5, p["mix_B"].astype(F32))
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        mix = p["mu"][i].astype(F32) + offs[i]
+        out[name] = (x.astype(F32) + dx.astype(F32) * mix).astype(x.dtype)
+    return out
+
+
+def _decay(p, xw):
+    """Data-dependent decay w in (0,1): exp(-exp(base + lora(xw))).
+
+    The pre-decay exponent is clipped at +0.35 (=> w >= ~0.24, |log w| <= 1.42)
+    so the chunked WKV form stays within f32 range; this is the same kind of
+    clamp chunked GLA/RWKV production kernels apply.
+    """
+    lora = jnp.einsum("...d,dr->...r", jnp.tanh(
+        jnp.einsum("...d,dr->...r", xw, p["decay_A"], preferred_element_type=F32)),
+        p["decay_B"].astype(F32))
+    return jnp.exp(-jnp.exp(jnp.clip(p["w_base"] + lora, -20.0, 0.35)))
+
+
+def _group_norm(o, scale, H):
+    """Per-head normalization of (..., H, K) flattened to (..., D)."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * lax.rsqrt(var + 1e-5)
+    flat = o.reshape(*o.shape[:-2], -1)
+    return flat * scale
+
+
+def _probe_chunk(default: int) -> int:
+    import os
+    v = os.environ.get("REPRO_PROBE_CHUNK")
+    return int(v) if v else default
+
+
+def time_mix_full(cfg, p, x, shift_in, wkv_state, chunk=32):
+    """Full-sequence time-mix. x (B,T,D). Returns (out, last_x, new_state)."""
+    B, T, D = x.shape
+    H, K = D // cfg.rwkv.head_size, cfg.rwkv.head_size
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    m = _dyn_mix(p, x, dx)
+    r = jnp.einsum("btd,de->bte", m["r"], p["wr"]).reshape(B, T, H, K)
+    k = jnp.einsum("btd,de->bte", m["k"], p["wk"]).reshape(B, T, H, K)
+    v = jnp.einsum("btd,de->bte", m["v"], p["wv"]).reshape(B, T, H, K)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", m["g"], p["wg"]).astype(F32))
+    w = _decay(p, m["w"]).reshape(B, T, H, K)
+    u = p["u"].reshape(H, K)
+    o, new_state = wkv6_chunked(r, k, v, w, u, wkv_state,
+                                chunk=min(_probe_chunk(chunk), T))
+    o = _group_norm(o, p["ln_x_scale"], H) * g
+    out = jnp.einsum("btd,de->bte", o.astype(x.dtype), p["wo"])
+    return out, x[:, -1], new_state
+
+
+def time_mix_step(cfg, p, x, shift_in, wkv_state):
+    """Single-token time-mix. x (B, D)."""
+    B, D = x.shape
+    H, K = D // cfg.rwkv.head_size, cfg.rwkv.head_size
+    out, last, state = time_mix_full(cfg, p, x[:, None], shift_in,
+                                     wkv_state, chunk=1)
+    return out[:, 0], last, state
+
+
+def channel_mix(p, x, shift_in):
+    """x (B,T,D) or (B,D) with matching shift_in (B,D)."""
+    single = x.ndim == 2
+    if single:
+        x = x[:, None]
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["cm_wk"],
+                                          preferred_element_type=F32)))
+    kv = jnp.einsum("btf,fd->btd", k.astype(x.dtype), p["cm_wv"])
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cm_wr"],
+                                    preferred_element_type=F32)).astype(x.dtype) * kv
+    last = x[:, -1]
+    return (out[:, 0], last) if single else (out, last)
+
+
+# ---------------------------------------------------------------------------
+# model-level forward
+# ---------------------------------------------------------------------------
+
+def rwkv_forward(cfg: ModelConfig, params, tokens, *, pctx: Optional[ParallelCtx] = None,
+                 state: Optional[RWKVState] = None, return_state: bool = False,
+                 remat: bool = False):
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, pctx, pctx.dp_spec if pctx else None, None, None)
+    if state is None:
+        state = RWKVState.zeros(cfg, B, x.dtype)
+
+    def body(x, scanned):
+        lp, att_s, ffn_s, wkv_s = scanned
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        att, att_last, wkv_new = time_mix_full(cfg, lp, h, att_s, wkv_s)
+        x = x + att
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        ffn, ffn_last = channel_mix(lp, h2, ffn_s)
+        x = x + ffn
+        return x, (att_last, ffn_last, wkv_new)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, (att_s, ffn_s, wkv_s) = _uscan(
+        body_fn, x, (params["layers"], state.att_shift, state.ffn_shift, state.wkv))
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                        preferred_element_type=F32)
+    if return_state:
+        return logits, RWKVState(att_s, ffn_s, wkv_s)
+    return logits
+
+
+def rwkv_prefill(cfg, params, tokens, *, pctx=None):
+    logits, st = rwkv_forward(cfg, params, tokens, pctx=pctx, return_state=True)
+    return logits[:, -1], st
+
+
+def rwkv_decode(cfg, params, state: RWKVState, tokens, positions=None, *, pctx=None):
+    """tokens (B,) -> (logits (B,V), new state). positions unused (stateful)."""
+    logits, st = rwkv_forward(cfg, params, tokens[:, None], pctx=pctx,
+                              state=state, return_state=True)
+    return logits[:, -1], st

@@ -1,0 +1,19 @@
+"""Scan wrapper honoring REPRO_UNROLL_SCANS.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count, so scanned layer stacks under-report flops/bytes/collectives. The
+roofline probe (``launch/roofline_probe.py``) sets REPRO_UNROLL_SCANS=1 and
+compiles reduced-depth configs with every scan unrolled, then extrapolates
+per-layer costs to full depth. Production/dry-run paths keep rolled scans
+(small HLO, fast compiles).
+"""
+from __future__ import annotations
+
+import os
+
+from jax import lax
+
+
+def scan(body, init, xs, length=None):
+    unroll = os.environ.get("REPRO_UNROLL_SCANS") == "1"
+    return lax.scan(body, init, xs, length=length, unroll=True if unroll else 1)

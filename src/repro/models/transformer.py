@@ -1,0 +1,362 @@
+"""Dense / MoE decoder-only LM (covers gemma2, internlm2, qwen2.5, llama3.2,
+llava backbone, dbrx, granite-moe).
+
+Layer stacks are scanned (``lax.scan``) so HLO size is O(1) in depth — this is
+what keeps 512-device dry-run compiles tractable. Alternating local/global
+attention (gemma2) is handled by a per-layer ``is_local`` scalar carried as a
+scan input; logit softcaps and pre+post sublayer norms are config-driven.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.scan_util import scan as _uscan
+from repro.models import layers as L
+from repro.models.layers import (ParallelCtx, apply_norm, attention, attn_out,
+                                 attn_qkv, constrain, init_attn, init_mlp,
+                                 init_moe, init_norm, mha, mlp, moe_ffn,
+                                 moe_ffn_ep_local)
+
+F32 = jnp.float32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    """Dense per-layer KV cache: k/v (L, B, Smax, Hkv, Dh)."""
+    k: jax.Array
+    v: jax.Array
+
+    def tree_flatten(self):
+        return (self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        shp = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        return cls(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+    @classmethod
+    def specs(cls, cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        shp = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        sds = jax.ShapeDtypeStruct(shp, dtype)
+        return cls(sds, sds)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": init_norm(cfg, cfg.d_model, dtype),
+        "attn": init_attn(cfg, ks[0], dtype),
+        "ln_mlp": init_norm(cfg, cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = init_mlp(cfg, ks[1], dtype)
+    if cfg.post_sublayer_norm:
+        p["ln_post_attn"] = init_norm(cfg, cfg.d_model, dtype)
+        p["ln_post_mlp"] = init_norm(cfg, cfg.d_model, dtype)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys)
+    params = {
+        "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), dtype)
+                 * cfg.d_model ** -0.5,
+        "layers": stacked,
+        "ln_final": init_norm(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), dtype) * cfg.d_model ** -0.5
+    return params
+
+
+def layer_kind_flags(cfg: ModelConfig) -> jax.Array:
+    """(L,) float32: 1.0 where the layer uses local (sliding-window) attention."""
+    return jnp.array([1.0 if k == "local" else 0.0 for k in cfg.layer_kinds()], F32)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _moe_block(cfg: ModelConfig, lp, h, pctx: Optional[ParallelCtx]):
+    if pctx is not None and pctx.ep_axis is not None and pctx.mesh is not None:
+        m = cfg.moe
+        dp = pctx.dp_spec
+        ep, tp = pctx.ep_axis, pctx.tp_axis
+        wspec = {"router": P(), "w_gate": P(ep, None, tp), "w_up": P(ep, None, tp),
+                 "w_down": P(ep, tp, None)}
+        fn = jax.shard_map(
+            partial(moe_ffn_ep_local, cfg, ep_axis=ep, tp_axis=tp),
+            mesh=pctx.mesh, in_specs=(wspec, P(dp, None, None)),
+            out_specs=P(dp, None, None), check_vma=False)
+        return fn(lp["moe"], h)
+    import os
+    token_shard = "moe_replicated" in os.environ.get("REPRO_OPT", "")
+    return moe_ffn(cfg, lp["moe"], h, pctx, token_shard=token_shard)
+
+
+def _layer_full(cfg: ModelConfig, x, lp, is_local, positions, pctx):
+    """Full-sequence layer (train / prefill). Returns (x, (k, v))."""
+    h = apply_norm(cfg, lp["ln_attn"], x)
+    q, k, v = attn_qkv(cfg, lp["attn"], h, positions)
+    o = attention(q, k, v, positions, positions, causal=True,
+                  window=cfg.sliding_window, is_local=is_local,
+                  softcap=cfg.attn_logit_softcap)
+    o = attn_out(lp["attn"], o)
+    if cfg.post_sublayer_norm:
+        o = apply_norm(cfg, lp["ln_post_attn"], o)
+    x = x + o
+    x = constrain(x, pctx, pctx.dp_spec if pctx else None, None, None)
+    h2 = apply_norm(cfg, lp["ln_mlp"], x)
+    if cfg.family == "moe":
+        f = _moe_block(cfg, lp, h2, pctx)
+    else:
+        f = mlp(cfg, lp["mlp"], h2, pctx)
+    if cfg.post_sublayer_norm:
+        f = apply_norm(cfg, lp["ln_post_mlp"], f)
+    x = x + f
+    x = constrain(x, pctx, pctx.dp_spec if pctx else None, None, None)
+    return x, (k, v)
+
+
+def _embed(cfg: ModelConfig, params, tokens, embeds=None):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if embeds is not None:   # modality-stub tokens are prepended
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _unembed(cfg: ModelConfig, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, w, preferred_element_type=F32)
+    if cfg.final_logit_softcap is not None:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# forward: full sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def lm_forward(cfg: ModelConfig, params, tokens, *, pctx: Optional[ParallelCtx] = None,
+               embeds=None, positions=None, return_cache: bool = False,
+               remat: bool = False, return_hidden: bool = False):
+    """tokens (B, S) -> logits (B, S_total, V); optionally per-layer KV."""
+    x = _embed(cfg, params, tokens, embeds)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = constrain(x, pctx, pctx.dp_spec if pctx else None, None, None)
+    kinds = layer_kind_flags(cfg)
+    q_pos = positions
+
+    def body(x, scanned):
+        lp, is_local = scanned
+        return _layer_full(cfg, x, lp, is_local, positions, pctx)
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, (ks, vs) = _uscan(body_fn, x, (params["layers"], kinds))
+    x = apply_norm(cfg, params["ln_final"], x)
+    if return_hidden:
+        return x
+    logits = _unembed(cfg, params, x)
+    logits = constrain(logits, pctx, pctx.dp_spec if pctx else None, None,
+                       pctx.tp_axis if pctx else None)
+    if return_cache:
+        return logits, KVCache(ks, vs)
+    return logits
+
+
+def lm_prefill(cfg: ModelConfig, params, tokens, *, pctx=None, embeds=None,
+               positions=None):
+    logits, cache = lm_forward(cfg, params, tokens, pctx=pctx, embeds=embeds,
+                               positions=positions, return_cache=True)
+    return logits[:, -1], cache
+
+
+# ---------------------------------------------------------------------------
+# forward: incremental step against a dense KV cache
+#   C == 1      -> decode
+#   C == chunk  -> chunked prefill (attends to previously cached prefix)
+# ---------------------------------------------------------------------------
+
+def lm_step(cfg: ModelConfig, params, cache: KVCache, tokens, positions, *,
+            pctx: Optional[ParallelCtx] = None):
+    """tokens (B, C) int32; positions (B, C) int32 (cache indices to write).
+
+    Returns (logits (B, C, V), updated cache). Every layer writes its new KV
+    at ``positions`` then attends over the full valid prefix (+ sliding
+    window on local layers).
+    """
+    B, C = tokens.shape
+    Smax = cache.k.shape[2]
+    x = _embed(cfg, params, tokens)                   # (B, C, D)
+    x = constrain(x, pctx, _decode_dp(pctx, B), None, None)
+    kinds = layer_kind_flags(cfg)
+    kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    kv_valid = kv_pos <= jnp.max(positions, axis=1, keepdims=True)
+    q_pos = positions
+    b_idx = jnp.arange(B)[:, None]
+
+    def body(x, scanned):
+        lp, is_local, k_l, v_l = scanned
+        h = apply_norm(cfg, lp["ln_attn"], x)
+        q, k_new, v_new = attn_qkv(cfg, lp["attn"], h, q_pos)
+        k_l = k_l.at[b_idx, positions].set(k_new)
+        v_l = v_l.at[b_idx, positions].set(v_new)
+        o = attention(q, k_l, v_l, q_pos, kv_pos, kv_valid=kv_valid,
+                      causal=True, window=cfg.sliding_window,
+                      is_local=is_local, softcap=cfg.attn_logit_softcap)
+        o = attn_out(lp["attn"], o)
+        if cfg.post_sublayer_norm:
+            o = apply_norm(cfg, lp["ln_post_attn"], o)
+        x = x + o
+        h2 = apply_norm(cfg, lp["ln_mlp"], x)
+        if cfg.family == "moe":
+            f = _moe_block(cfg, lp, h2, pctx)
+        else:
+            f = mlp(cfg, lp["mlp"], h2, pctx)
+        if cfg.post_sublayer_norm:
+            f = apply_norm(cfg, lp["ln_post_mlp"], f)
+        x = x + f
+        return x, (k_l, v_l)
+
+    x, (ks, vs) = _uscan(body, x, (params["layers"], kinds, cache.k, cache.v))
+    x = apply_norm(cfg, params["ln_final"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, KVCache(ks, vs)
+
+
+def lm_decode(cfg: ModelConfig, params, cache: KVCache, tokens, positions, *,
+              pctx: Optional[ParallelCtx] = None):
+    """tokens (B,), positions (B,) -> (logits (B, V), updated cache)."""
+    logits, cache = lm_step(cfg, params, cache, tokens[:, None],
+                            positions[:, None], pctx=pctx)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# windowed decode (perf iteration, EXPERIMENTS.md §Perf): local (sliding-
+# window) layers keep a ring buffer of `window` KV slots instead of the full
+# sequence — for gemma2-style local/global alternation this halves the KV
+# footprint and HBM traffic of long-context decode exactly.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowedKVCache:
+    """k/v_loc: (Lp, B, W, Hkv, Dh) ring buffers (local layers);
+    k/v_glob: (Lp, B, Smax, Hkv, Dh). Pattern period must be 2
+    ('local','global')."""
+    k_loc: jax.Array
+    v_loc: jax.Array
+    k_glob: jax.Array
+    v_glob: jax.Array
+
+    def tree_flatten(self):
+        return (self.k_loc, self.v_loc, self.k_glob, self.v_glob), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def specs(cls, cfg: ModelConfig, batch: int, max_len: int,
+              dtype=jnp.bfloat16):
+        assert cfg.layer_pattern == ("local", "global")
+        Lp = cfg.n_layers // 2
+        loc = jax.ShapeDtypeStruct(
+            (Lp, batch, cfg.sliding_window, cfg.n_kv_heads, cfg.head_dim_),
+            dtype)
+        glob = jax.ShapeDtypeStruct(
+            (Lp, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dtype)
+        return cls(loc, loc, glob, glob)
+
+
+def lm_decode_windowed(cfg: ModelConfig, params, cache: WindowedKVCache,
+                       tokens, positions, *,
+                       pctx: Optional[ParallelCtx] = None):
+    """Single-token decode with ring-buffered local layers. Exact semantics:
+    slot i of the ring holds the most recent position p <= pos with
+    p ≡ i (mod W), which is precisely the sliding-window attention set."""
+    assert cfg.layer_pattern == ("local", "global")
+    B = tokens.shape[0]
+    W = cfg.sliding_window
+    Smax = cache.k_glob.shape[2]
+    x = _embed(cfg, params, tokens[:, None])
+    b_idx = jnp.arange(B)
+    q_pos = positions[:, None]
+    # ring-buffer positions per slot
+    slot = jnp.arange(W, dtype=jnp.int32)
+    ring_pos = positions[:, None] - ((positions[:, None] - slot[None]) % W)
+    ring_valid = ring_pos >= 0
+    kv_pos_g = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    kv_valid_g = kv_pos_g <= positions[:, None]
+    pair_params = jax.tree.map(
+        lambda a: a.reshape((cfg.n_layers // 2, 2) + a.shape[1:]),
+        params["layers"])
+
+    def sublayer(x, lp, k_l, v_l, kv_pos, kv_valid, write_pos):
+        h = apply_norm(cfg, lp["ln_attn"], x)
+        q, k_new, v_new = attn_qkv(cfg, lp["attn"], h, q_pos)
+        k_l = k_l.at[b_idx, write_pos].set(k_new[:, 0])
+        v_l = v_l.at[b_idx, write_pos].set(v_new[:, 0])
+        o = attention(q, k_l, v_l, q_pos, kv_pos, kv_valid=kv_valid,
+                      causal=True, softcap=cfg.attn_logit_softcap)
+        o = attn_out(lp["attn"], o)
+        if cfg.post_sublayer_norm:
+            o = apply_norm(cfg, lp["ln_post_attn"], o)
+        x = x + o
+        h2 = apply_norm(cfg, lp["ln_mlp"], x)
+        f = mlp(cfg, lp["mlp"], h2, pctx)
+        if cfg.post_sublayer_norm:
+            f = apply_norm(cfg, lp["ln_post_mlp"], f)
+        return x + f, k_l, v_l
+
+    def body(x, scanned):
+        lp_pair, kl, vl, kg, vg = scanned
+        lp0 = jax.tree.map(lambda a: a[0], lp_pair)
+        lp1 = jax.tree.map(lambda a: a[1], lp_pair)
+        x, kl, vl = sublayer(x, lp0, kl, vl, ring_pos, ring_valid,
+                             positions % W)
+        x, kg, vg = sublayer(x, lp1, kg, vg, kv_pos_g, kv_valid_g, positions)
+        return x, (kl, vl, kg, vg)
+
+    x, (kl, vl, kg, vg) = _uscan(
+        body, x, (pair_params, cache.k_loc, cache.v_loc,
+                  cache.k_glob, cache.v_glob))
+    x = apply_norm(cfg, params["ln_final"], x)
+    logits = _unembed(cfg, params, x[:, 0])
+    return logits, WindowedKVCache(kl, vl, kg, vg)
+
+
+def _decode_dp(pctx: Optional[ParallelCtx], batch: int):
+    if pctx is None:
+        return None
+    return pctx.dp_spec

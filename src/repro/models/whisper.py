@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB: the
+conv feature extractor is replaced by precomputed frame embeddings supplied
+via ``input_specs()``, per the assignment).
+
+Encoder: bidirectional pre-LN transformer over frame embeddings + sinusoidal
+positions. Decoder: causal self-attention (cached) + cross-attention over the
+encoder output (cross-KV computed once at prefill), learned positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.scan_util import scan as _uscan
+from repro.models.layers import (ParallelCtx, apply_norm, attention, attn_out,
+                                 attn_qkv, constrain, init_attn, init_mlp,
+                                 init_norm, mlp)
+
+F32 = jnp.float32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncDecCache:
+    """self_k/self_v: (L, B, Tdec_max, H, Dh); cross_k/cross_v: (L, B, Tenc, H, Dh)."""
+    self_k: jax.Array
+    self_v: jax.Array
+    cross_k: jax.Array
+    cross_v: jax.Array
+
+    def tree_flatten(self):
+        return (self.self_k, self.self_v, self.cross_k, self.cross_v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, dec_len: int, enc_len: int,
+              dtype=jnp.bfloat16):
+        s = (cfg.n_layers, batch, dec_len, cfg.n_kv_heads, cfg.head_dim_)
+        c = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim_)
+        z = jnp.zeros
+        return cls(z(s, dtype), z(s, dtype), z(c, dtype), z(c, dtype))
+
+    @classmethod
+    def specs(cls, cfg: ModelConfig, batch: int, dec_len: int, enc_len: int,
+              dtype=jnp.bfloat16):
+        s = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, dec_len, cfg.n_kv_heads, cfg.head_dim_), dtype)
+        c = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim_), dtype)
+        return cls(s, s, c, c)
+
+
+def _sinusoid(length: int, dim: int):
+    pos = jnp.arange(length, dtype=F32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2, dtype=F32) / dim)
+    pe = jnp.zeros((length, dim), F32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _init_enc_layer(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln_attn": init_norm(cfg, cfg.d_model, dtype),
+            "attn": init_attn(cfg, k1, dtype),
+            "ln_mlp": init_norm(cfg, cfg.d_model, dtype),
+            "mlp": init_mlp(cfg, k2, dtype)}
+
+
+def _init_dec_layer(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln_self": init_norm(cfg, cfg.d_model, dtype),
+            "self_attn": init_attn(cfg, k1, dtype),
+            "ln_cross": init_norm(cfg, cfg.d_model, dtype),
+            "cross_attn": init_attn(cfg, k2, dtype),
+            "ln_mlp": init_norm(cfg, cfg.d_model, dtype),
+            "mlp": init_mlp(cfg, k3, dtype)}
+
+
+def init_whisper(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    D = cfg.d_model
+    return {
+        "embed": jax.random.normal(kt, (cfg.vocab_size, D), dtype) * D ** -0.5,
+        "dec_pos": jax.random.normal(kp, (cfg.max_target_len, D), dtype) * 0.01,
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k, dtype))(dec_keys),
+        "ln_enc_final": init_norm(cfg, D, dtype),
+        "ln_dec_final": init_norm(cfg, D, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, *, pctx: Optional[ParallelCtx] = None):
+    """frames: (B, Tenc, D) precomputed frame embeddings (stub frontend)."""
+    B, T, D = frames.shape
+    x = frames + _sinusoid(T, D).astype(frames.dtype)[None]
+    x = constrain(x, pctx, pctx.dp_spec if pctx else None, None, None)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(x, lp):
+        h = apply_norm(cfg, lp["ln_attn"], x)
+        q, k, v = attn_qkv(cfg, lp["attn"], h, positions, use_rope=False)
+        x = x + attn_out(lp["attn"], attention(q, k, v, positions, positions,
+                                               causal=False))
+        x = x + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln_mlp"], x), pctx)
+        return x, None
+
+    x, _ = _uscan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["ln_enc_final"], x)
+
+
+def _dec_layer(cfg, lp, x, positions, self_kv, cross_kv, pos_write=None,
+               kv_pos=None, kv_valid=None):
+    """One decoder layer; self_kv/cross_kv are (k, v) tensors."""
+    B = x.shape[0]
+    h = apply_norm(cfg, lp["ln_self"], x)
+    q, k_new, v_new = attn_qkv(cfg, lp["self_attn"], h, positions, use_rope=False)
+    k_c, v_c = self_kv
+    if pos_write is not None:                      # decode: single-token write
+        b_idx = jnp.arange(B)
+        k_c = k_c.at[b_idx, pos_write].set(k_new[:, 0])
+        v_c = v_c.at[b_idx, pos_write].set(v_new[:, 0])
+    else:
+        k_c, v_c = k_new, v_new
+    skv_pos = positions if kv_pos is None else kv_pos
+    x = x + attn_out(lp["self_attn"], attention(
+        q, k_c, v_c, positions, skv_pos, kv_valid=kv_valid, causal=True))
+    h = apply_norm(cfg, lp["ln_cross"], x)
+    qc = attn_qkv(cfg, lp["cross_attn"], h, positions, use_rope=False)[0]
+    ck, cv = cross_kv
+    enc_pos = jnp.broadcast_to(jnp.arange(ck.shape[1], dtype=jnp.int32),
+                               (B, ck.shape[1]))
+    x = x + attn_out(lp["cross_attn"], attention(
+        qc, ck, cv, positions, enc_pos, causal=False))
+    x = x + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln_mlp"], x))
+    return x, (k_c, v_c)
+
+
+def _cross_kv(cfg, lp, enc_out):
+    """Precompute cross K/V from encoder output for one layer."""
+    B, T, _ = enc_out.shape
+    k = jnp.einsum("btd,de->bte", enc_out, lp["cross_attn"]["wk"]
+                   ).reshape(B, T, cfg.n_kv_heads, cfg.head_dim_)
+    v = jnp.einsum("btd,de->bte", enc_out, lp["cross_attn"]["wv"]
+                   ).reshape(B, T, cfg.n_kv_heads, cfg.head_dim_)
+    return k, v
+
+
+def whisper_forward(cfg: ModelConfig, params, dec_tokens, frames, *,
+                    pctx: Optional[ParallelCtx] = None, return_cache: bool = False,
+                    remat: bool = False):
+    """Teacher-forced full forward: frames (B,Tenc,D), dec_tokens (B,Tdec)."""
+    enc_out = encode(cfg, params, frames, pctx=pctx)
+    B, Tdec = dec_tokens.shape
+    x = params["embed"][dec_tokens] + params["dec_pos"][:Tdec][None]
+    positions = jnp.broadcast_to(jnp.arange(Tdec, dtype=jnp.int32), (B, Tdec))
+
+    def body(x, lp):
+        ck, cv = _cross_kv(cfg, lp, enc_out)
+        x, (k, v) = _dec_layer(cfg, lp, x, positions, (None, None), (ck, cv))
+        return x, (k, v, ck, cv)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, (ks, vs, cks, cvs) = _uscan(body_fn, x, params["dec_layers"])
+    x = apply_norm(cfg, params["ln_dec_final"], x)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"],
+                        preferred_element_type=F32)
+    if return_cache:
+        return logits, EncDecCache(ks, vs, cks, cvs)
+    return logits
+
+
+def whisper_prefill(cfg, params, dec_tokens, frames, *, pctx=None):
+    logits, cache = whisper_forward(cfg, params, dec_tokens, frames, pctx=pctx,
+                                    return_cache=True)
+    return logits[:, -1], cache
+
+
+def whisper_decode(cfg: ModelConfig, params, cache: EncDecCache, tokens, positions,
+                   *, pctx: Optional[ParallelCtx] = None):
+    """tokens (B,), positions (B,) -> (logits, cache). Cross-KV is static."""
+    B = tokens.shape[0]
+    Smax = cache.self_k.shape[2]
+    pos_emb = params["dec_pos"][jnp.clip(positions, 0, cfg.max_target_len - 1)]
+    x = params["embed"][tokens] + pos_emb
+    x = x[:, None]
+    kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    kv_valid = kv_pos <= positions[:, None]
+
+    def body(x, scanned):
+        lp, k_c, v_c, ck, cv = scanned
+        x, (k_c, v_c) = _dec_layer(cfg, lp, x, positions[:, None],
+                                   (k_c, v_c), (ck, cv), pos_write=positions,
+                                   kv_pos=kv_pos, kv_valid=kv_valid)
+        return x, (k_c, v_c)
+
+    x, (ks, vs) = _uscan(body, x, (params["dec_layers"], cache.self_k,
+                                     cache.self_v, cache.cross_k, cache.cross_v))
+    x = apply_norm(cfg, params["ln_dec_final"], x[:, 0])
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"], preferred_element_type=F32)
+    return logits, EncDecCache(ks, vs, cache.cross_k, cache.cross_v)

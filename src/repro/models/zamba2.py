@@ -1,0 +1,210 @@
+"""Zamba2 hybrid: Mamba2 backbone + a *shared* transformer block applied every
+``shared_attn_every`` layers. The shared block's weights are reused at each
+application but each application keeps its own KV cache; its input is
+``proj(concat(hidden, original_embedding))`` as in the Zamba papers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.scan_util import scan as _uscan
+from repro.models import mamba2
+from repro.models.layers import (ParallelCtx, apply_norm, attention, attn_out,
+                                 attn_qkv, constrain, init_attn, init_mlp,
+                                 init_norm, mlp, rms_norm)
+from repro.models.transformer import _unembed
+
+F32 = jnp.float32
+
+
+def shared_positions(cfg: ModelConfig):
+    """Mamba-layer indices after which the shared attention block runs."""
+    return tuple(i for i in range(cfg.n_layers)
+                 if (i + 1) % cfg.shared_attn_every == 0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ZambaCache:
+    """mamba: MambaState with leading L axis; k/v: (n_apps, B, Smax, Hkv, Dh)."""
+    mamba: mamba2.MambaState
+    k: jax.Array
+    v: jax.Array
+
+    def tree_flatten(self):
+        return (self.mamba, self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        n_apps = len(shared_positions(cfg))
+        shp = (n_apps, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        return cls(mamba2.state_zeros(cfg, cfg.n_layers, batch, dtype),
+                   jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+    @classmethod
+    def specs(cls, cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        n_apps = len(shared_positions(cfg))
+        shp = (n_apps, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        sds = jax.ShapeDtypeStruct(shp, dtype)
+        return cls(mamba2.state_specs(cfg, cfg.n_layers, batch, dtype), sds, sds)
+
+
+def init_zamba(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k_embed, k_layers, k_shared, k_head, k_proj = jax.random.split(key, 5)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    ks = jax.random.split(k_shared, 2)
+    D = cfg.d_model
+    shared = {
+        "in_proj": jax.random.normal(k_proj, (2 * D, D), dtype) * (2 * D) ** -0.5,
+        "ln_attn": init_norm(cfg, D, dtype),
+        "attn": init_attn(cfg, ks[0], dtype),
+        "ln_mlp": init_norm(cfg, D, dtype),
+        "mlp": init_mlp(cfg, ks[1], dtype),
+    }
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab_size, D), dtype) * D ** -0.5,
+        "mamba_layers": jax.vmap(
+            lambda k: mamba2.init_mamba_layer(cfg, k, dtype))(layer_keys),
+        "shared": shared,
+        "ln_final": jnp.zeros((D,), dtype),
+        "lm_head": jax.random.normal(k_head, (D, cfg.vocab_size), dtype) * D ** -0.5,
+    }
+
+
+def _shared_block_full(cfg, sp, x, x0, positions, kv_pos=None, kv_valid=None,
+                       k_cache=None, v_cache=None, pos_write=None):
+    """Shared attn+MLP block over full sequence; returns (delta, k, v)."""
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = jnp.einsum("bsd,de->bse", h, sp["in_proj"]).astype(x.dtype)
+    a_in = apply_norm(cfg, sp["ln_attn"], h)
+    q, k, v = attn_qkv(cfg, sp["attn"], a_in, positions)
+    if k_cache is not None:                        # decode: write into cache
+        b_idx = jnp.arange(x.shape[0])
+        k_cache = k_cache.at[b_idx, pos_write].set(k[:, 0])
+        v_cache = v_cache.at[b_idx, pos_write].set(v[:, 0])
+        k, v = k_cache, v_cache
+    o = attn_out(sp["attn"], attention(
+        q, k, v, positions, positions if kv_pos is None else kv_pos,
+        kv_valid=kv_valid, causal=True))
+    h = h + o
+    m_in = apply_norm(cfg, sp["ln_mlp"], h)
+    h = h + mlp(cfg, sp["mlp"], m_in)
+    return h, k, v
+
+
+def zamba_forward(cfg: ModelConfig, params, tokens, *,
+                  pctx: Optional[ParallelCtx] = None, cache: Optional[ZambaCache] = None,
+                  return_cache: bool = False, remat: bool = False):
+    """Full-sequence forward (train / prefill)."""
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, pctx, pctx.dp_spec if pctx else None, None, None)
+    x0 = x
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    if cache is None:
+        cache = ZambaCache.zeros(cfg, B, T, x.dtype)
+    spos = shared_positions(cfg)
+    segments = _segments(cfg, spos)
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    start = 0
+    for app_i, (lo, hi) in enumerate(segments):
+        lp = jax.tree.map(lambda a: a[lo:hi], params["mamba_layers"])
+        cs = cache.mamba.conv[lo:hi]
+        ss = cache.mamba.ssm[lo:hi]
+
+        def body(x, scanned):
+            lpi, c, s = scanned
+            h = rms_norm(x, lpi["ln"], cfg.norm_eps)
+            out, (nc, ns) = mamba2.mamba_block_full(cfg, lpi, h, c, s)
+            return x + out, (nc, ns)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, (nc, ns) = _uscan(body_fn, x, (lp, cs, ss))
+        new_conv.append(nc)
+        new_ssm.append(ns)
+        if app_i < len(spos):
+            delta, k, v = _shared_block_full(cfg, params["shared"], x, x0,
+                                             positions)
+            x = x + delta
+            new_k.append(k)
+            new_v.append(v)
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    if return_cache:
+        new_cache = ZambaCache(
+            mamba2.MambaState(jnp.concatenate(new_conv), jnp.concatenate(new_ssm)),
+            jnp.stack(new_k) if new_k else cache.k,
+            jnp.stack(new_v) if new_v else cache.v)
+        return logits, new_cache
+    return logits
+
+
+def zamba_prefill(cfg, params, tokens, *, pctx=None):
+    logits, cache = zamba_forward(cfg, params, tokens, pctx=pctx, return_cache=True)
+    return logits[:, -1], cache
+
+
+def zamba_decode(cfg: ModelConfig, params, cache: ZambaCache, tokens, positions, *,
+                 pctx: Optional[ParallelCtx] = None):
+    """tokens (B,), positions (B,) -> (logits (B,V), cache)."""
+    B = tokens.shape[0]
+    Smax = cache.k.shape[2]
+    x = params["embed"][tokens]                    # (B, D)
+    x0 = x
+    kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    kv_valid = kv_pos <= positions[:, None]
+    spos = shared_positions(cfg)
+    segments = _segments(cfg, spos)
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    for app_i, (lo, hi) in enumerate(segments):
+        lp = jax.tree.map(lambda a: a[lo:hi], params["mamba_layers"])
+        cs = cache.mamba.conv[lo:hi]
+        ss = cache.mamba.ssm[lo:hi]
+
+        def body(x, scanned):
+            lpi, c, s = scanned
+            h = rms_norm(x, lpi["ln"], cfg.norm_eps)
+            out, (nc, ns) = mamba2.mamba_block_step(cfg, lpi, h, c, s)
+            return x + out, (nc, ns)
+
+        x, (nc, ns) = _uscan(body, x, (lp, cs, ss))
+        new_conv.append(nc)
+        new_ssm.append(ns)
+        if app_i < len(spos):
+            delta, k, v = _shared_block_full(
+                cfg, params["shared"], x[:, None], x0[:, None], positions[:, None],
+                kv_pos=kv_pos, kv_valid=kv_valid,
+                k_cache=cache.k[app_i], v_cache=cache.v[app_i],
+                pos_write=positions)
+            x = x + delta[:, 0]
+            new_k.append(k)
+            new_v.append(v)
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    new_cache = ZambaCache(
+        mamba2.MambaState(jnp.concatenate(new_conv), jnp.concatenate(new_ssm)),
+        jnp.stack(new_k) if new_k else cache.k,
+        jnp.stack(new_v) if new_v else cache.v)
+    return logits, new_cache
+
+
+def _segments(cfg: ModelConfig, spos) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous mamba-layer ranges split at shared-block positions."""
+    segs = []
+    start = 0
+    for p in spos:
+        segs.append((start, p + 1))
+        start = p + 1
+    if start < cfg.n_layers:
+        segs.append((start, cfg.n_layers))
+    return tuple(segs)

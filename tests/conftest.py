@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests and benches see ONE device; only launch/dryrun sets the 512-device
+# flag (per assignment). A couple of distributed tests spawn their own
+# subprocess with more host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,257 @@
+"""Unit + property tests for the MARS core: block manager, telemetry/AIMD,
+queue packing (Alg. 1), MLFQ, co-scheduler."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
+from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler
+from repro.core.events import EventBus
+from repro.core.mlfq import MLFQConfig, PriorityCoordinator
+from repro.core.session import Round, make_session
+from repro.core.telemetry import Telemetry, TelemetryConfig
+from repro.engine.block_manager import BlockManager
+
+
+# ---------------------------------------------------------------------------
+# block manager
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "pin", "unpin"]),
+                          st.integers(1, 64)), max_size=200))
+def test_block_manager_never_leaks(ops):
+    bm = BlockManager(256, 32)
+    held = 0
+    pinned = 0
+    for op, n in ops:
+        if op == "alloc":
+            if bm.alloc(n):
+                held += n
+        elif op == "free" and held - pinned >= n:
+            bm.release(n)
+            held -= n
+        elif op == "pin" and held - pinned >= n:
+            bm.pin(n)
+            pinned += n
+        elif op == "unpin" and pinned >= n:
+            bm.unpin(n)
+            pinned -= n
+        p = bm.probe()
+        assert p.free + held == p.total
+        assert p.free >= 0 and p.pinned == pinned
+
+
+@given(st.integers(0, 10_000))
+def test_blocks_for_ceil(n):
+    bm = BlockManager(8, 32)
+    b = bm.blocks_for(n)
+    assert b * 32 >= n and (b - 1) * 32 < n or n == 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry / AIMD
+# ---------------------------------------------------------------------------
+
+def _telem(cpu_slots=4):
+    bus = EventBus()
+    return Telemetry(TelemetryConfig(cpu_slots=cpu_slots,
+                                     hysteresis_checks=2), bus), bus
+
+
+def test_tool_ema_and_hysteresis():
+    t, bus = _telem(cpu_slots=2)
+    bus.emit("tool_start", 0.0, 1, kind="x")
+    bus.emit("tool_start", 0.0, 2, kind="x")
+    assert t.active_tools == 2
+    # one hot probe isn't enough (hysteresis)
+    t.probe_gpu(100, 50, 0, 2, 1, 0)
+    assert not t.cpu_overloaded
+    t.probe_gpu(100, 50, 0, 2, 1, 0)
+    assert t.cpu_overloaded
+    bus.emit("tool_end", 5.0, 1, kind="x", duration=5.0)
+    bus.emit("tool_end", 6.0, 2, kind="x", duration=7.0)
+    assert t.active_tools == 0
+    assert 5.0 <= t.tool_estimate("x") <= 7.0
+    t.probe_gpu(100, 50, 0, 2, 1, 0)
+    t.probe_gpu(100, 50, 0, 2, 1, 0)
+    assert not t.cpu_overloaded
+
+
+def test_churn_drives_kv_overload():
+    t, bus = _telem()
+    for _ in range(5):
+        bus.emit("preempt", 0.0, 1, tokens=100, blocks=50)
+        t.probe_gpu(100, 10, 0, 4, 2, 40)
+    assert t.kv_overloaded
+    for _ in range(30):
+        t.probe_gpu(100, 10, 0, 4, 2, 40)   # churn decays
+    assert not t.kv_overloaded
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=60))
+def test_aimd_window_bounds(overloads):
+    """W_adm always within [w_min, w_max] whatever the overload pattern."""
+    t, bus = _telem()
+    cfg = ControlPlaneConfig(control_interval=0.0, w_min=1, w_max=32)
+    cp = ExternalControlPlane(cfg, t, bus)
+    now = 0.0
+    for hot in overloads:
+        t.cpu_overloaded = hot
+        t.kv_overloaded = False
+        now += 1.0
+        cp.update_window(now, avg_blocks_per_session=100.0)
+        assert cfg.w_min <= cp.w_adm <= cfg.w_max
+
+
+def test_aimd_multiplicative_decrease_additive_increase():
+    t, bus = _telem()
+    cfg = ControlPlaneConfig(control_interval=0.0, w_init=16.0)
+    cp = ExternalControlPlane(cfg, t, bus)
+    t.cpu_overloaded = True
+    cp.update_window(1.0, 100.0)
+    assert cp.w_adm == pytest.approx(16.0 * cfg.multiplicative_beta)
+    t.cpu_overloaded = False
+    t.churn_ema = 0.0
+    w = cp.w_adm
+    cp.update_window(2.0, 100.0)
+    assert cp.w_adm == pytest.approx(w + cfg.additive_alpha)
+
+
+# ---------------------------------------------------------------------------
+# PackQueue (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def _sessions(sizes, t0=0.0):
+    out = []
+    for i, sz in enumerate(sizes):
+        s = make_session(t0 + i * 0.01, [Round(sz, 10, None, 0.0)])
+        out.append(s)
+    return out
+
+
+def test_pack_queue_ascending_default():
+    t, bus = _telem()
+    cp = ExternalControlPlane(ControlPlaneConfig(), t, bus)
+    q = _sessions([3200, 320, 32000, 96])
+    packed = cp.pack_queue(q)
+    est = [cp.estimate_blocks(s) for s in packed]
+    assert est == sorted(est)
+
+
+def test_pack_queue_descending_under_cpu_overload():
+    t, bus = _telem()
+    t.cpu_overloaded = True
+    cp = ExternalControlPlane(ControlPlaneConfig(), t, bus)
+    q = _sessions([3200, 320, 32000, 96])
+    packed = cp.pack_queue(q)
+    est = [cp.estimate_blocks(s) for s in packed]
+    assert est == sorted(est, reverse=True)
+
+
+def test_pack_queue_first_fit_when_all_long():
+    t, bus = _telem()
+    t.free_blocks = 2500
+    cfg = ControlPlaneConfig(long_session_blocks=1000)
+    cp = ExternalControlPlane(cfg, t, bus)
+    q = _sessions([3 * 32 * 1400, 32 * 1200, 32 * 1100])   # all >= 1000 blocks
+    packed = cp.pack_queue(q)
+    est = [cp.estimate_blocks(s) for s in packed]
+    # feasible set (1100 + 1200 fits 2500) first, oversized last
+    assert est[-1] == max(est)
+    assert sum(est[:-1]) <= 2500
+
+
+# ---------------------------------------------------------------------------
+# MLFQ
+# ---------------------------------------------------------------------------
+
+def test_mlfq_base_level_monotone_in_footprint():
+    c = PriorityCoordinator(MLFQConfig())
+    small, big = _sessions([256, 200_000])
+    assert c.base_level(small) < c.base_level(big)
+
+
+def test_mlfq_service_demotion_bounded():
+    cfg = MLFQConfig()
+    c = PriorityCoordinator(cfg)
+    (s,) = _sessions([256])
+    l0 = c.level(s, 0.0)
+    s.service_tokens = 10_000_000
+    assert c.level(s, 0.0) <= l0 + cfg.max_demotion
+
+
+def test_mlfq_promotion_bounded_and_monotone():
+    cfg = MLFQConfig(promote_after=10.0, max_promotion=2)
+    c = PriorityCoordinator(cfg)
+    (s,) = _sessions([200_000])
+    s.admitted_at = s.last_service = 0.0
+    levels = [c.level(s, t) for t in (0.0, 15.0, 25.0, 1000.0)]
+    assert levels[1] <= levels[0] and levels[2] <= levels[1]
+    assert levels[0] - min(levels) <= cfg.max_promotion
+
+
+def test_mlfq_eviction_prefers_low_priority_then_big_kv():
+    c = PriorityCoordinator(MLFQConfig())
+    a, b, d = _sessions([128, 200_000, 200_000])
+    a.kv_blocks, b.kv_blocks, d.kv_blocks = 10, 50, 500
+    order = c.eviction_order([a, b, d], now=0.0)
+    assert order[0] is d and order[1] is b and order[-1] is a
+
+
+# ---------------------------------------------------------------------------
+# co-scheduler
+# ---------------------------------------------------------------------------
+
+def _cosched():
+    t, bus = _telem()
+    t.probe_gpu(1000, 500, 0, 2, 1, 0)
+    cs = OpportunisticCoScheduler(CoSchedulerConfig(block_size=32), t,
+                                  recompute_time_fn=lambda n: n / 10_000.0,
+                                  prefill_rate_fn=lambda: 10_000.0)
+    return cs, t
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 100_000), st.integers(0, 4000))
+def test_shrink_chunk_properties(want, free):
+    cs, _ = _cosched()
+    got = cs.shrink_chunk(want, free)
+    assert 0 <= got <= max(want, 32)
+    if got > 0:
+        assert -(-got // 32) <= max(free, 1)
+    if want > 0 and free >= -(-want // 32):
+        assert got == want                      # fits -> no shrink
+
+
+def test_retention_pins_under_slack_releases_under_pressure():
+    cs, t = _cosched()
+    (s,) = _sessions([64_000])
+    s.kv_blocks = 2000
+    s.resident_len = 64_000
+    s.tool_started = 0.0
+    s.rounds[0].tool_kind = "x"
+    t.tool_ema["x"] = 10.0
+    t.probe_gpu(4000, 2000, 0, 2, 1, 0)          # no waiting demand -> pin
+    assert cs.should_pin(s, now=1.0)
+    # long tool (test_runner scale) under heavy demand with no free blocks:
+    # holding 2000 blocks for ~400 s strands more work than the rebuild saves
+    t.tool_ema["x"] = 400.0
+    t.probe_gpu(4000, 10, 0, 8, 1, 20_000)
+    assert not cs.should_pin(s, now=1.0)
+
+
+def test_retention_reevaluation_revokes_overrunning_tools():
+    """Hazard residual: a pin that was fine at t=0 is revoked once the tool
+    overruns its estimate under demand."""
+    cs, t = _cosched()
+    (s,) = _sessions([16_000])
+    s.kv_blocks, s.resident_len, s.tool_started = 250, 16_000, 0.0
+    s.rounds[0].tool_kind = "x"
+    t.tool_ema["x"] = 2.0
+    t.probe_gpu(4000, 100, 250, 4, 1, 3000)
+    assert cs.should_pin(s, now=0.5)
+    assert not cs.should_pin(s, now=400.0)       # way past estimate

@@ -1,0 +1,106 @@
+"""Hypothesis property tests over the whole engine: random multi-round
+workloads under every policy must terminate with invariants intact, exact
+event bookkeeping, and no lost sessions. Plus the ServingAPI layer."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.qwen3_coder_30b import CONFIG as QWEN3
+from repro.core import events as ev
+from repro.core.session import Round, make_session
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig, run_sim
+from repro.models.perf_model import H100
+
+BACKEND = SimBackend(QWEN3, H100)
+
+session_strategy = st.lists(
+    st.tuples(st.integers(100, 40_000),          # new_input_tokens
+              st.integers(8, 200),               # decode_tokens
+              st.sampled_from(["terminal", "file_editor", "test_runner"]),
+              st.floats(0.1, 60.0)),             # tool seconds
+    min_size=1, max_size=5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(session_strategy, min_size=1, max_size=8),
+       st.sampled_from(["fcfs", "mars", "infercept", "continuum-dy"]),
+       st.integers(2_000, 12_000))
+def test_random_workloads_terminate_with_invariants(specs, policy, blocks):
+    eng = Engine(EngineConfig(total_kv_blocks=blocks, cpu_slots=4),
+                 policy, BACKEND)
+    sessions = []
+    for i, rounds_spec in enumerate(specs):
+        rounds = [Round(a, d, (k if j < len(rounds_spec) - 1 else None),
+                        (t if j < len(rounds_spec) - 1 else 0.0))
+                  for j, (a, d, k, t) in enumerate(rounds_spec)]
+        sessions.append(make_session(i * 1.0, rounds, ideal_time=1.0))
+    finished, _ = run_sim(eng, sessions, max_time=1e6, max_ticks=400_000)
+    eng.check_invariants()
+    # conservation: every session either finished or was capacity-rejected
+    assert len(finished) + len(eng.rejected) == len(sessions)
+    assert eng.blocks.free == eng.blocks.total          # everything released
+    assert eng.blocks.pinned == 0
+    # event bookkeeping: submits == first tokens == ends, per finished session
+    for s in finished:
+        n = len(s.rounds)
+        assert len(s.ttfts) == n
+        assert s.finish_time >= s.arrival_time
+    # paired tool events
+    assert eng.bus.counts.get(ev.TOOL_START, 0) == \
+        eng.bus.counts.get(ev.TOOL_END, 0)
+    # paired pin accounting (every pin was eventually unpinned or evicted)
+    pins = eng.bus.counts.get(ev.PIN, 0)
+    unpins = eng.bus.counts.get(ev.UNPIN, 0)
+    revoked = sum(1 for e in eng.bus.log if e.kind == ev.EVICT and
+                  e.data.get("reason") in ("pin_revoked", "reclaim"))
+    assert pins == unpins + revoked
+
+
+def test_serving_api_session_continuity():
+    """ServingAPI: one job_id spans rounds; futures resolve with tokens and
+    per-round TTFT; KV continuity shows up as a warm second round."""
+    from repro.configs.registry import get_config
+    from repro.core.events import EventBus
+    from repro.engine.api import ChatRequest, ServingAPI
+    from repro.engine.engine import run_live
+    from repro.engine.jax_runner import JaxBackend
+    from repro.engine.tools import RealToolExecutor
+
+    cfg = get_config("llama3.2-1b").reduced()
+    backend = JaxBackend(cfg, max_slots=2, max_len=256)
+    bus = EventBus()
+    tools = RealToolExecutor(cpu_slots=1, bus=bus)
+    eng = Engine(EngineConfig(total_kv_blocks=2 * 255 // 32, token_budget=128,
+                              max_decode_batch=2, decode_granularity=4,
+                              cpu_slots=1),
+                 "mars", backend, bus=bus, tool_exec=tools)
+    api = ServingAPI(eng)
+    effects = []
+    f1 = api.submit(ChatRequest(job_id="job-A", prompt_tokens=list(range(2, 50)),
+                                max_tokens=8,
+                                tool_call={"kind": "t",
+                                           "fn": lambda: effects.append(1)}))
+    f2 = api.submit(ChatRequest(job_id="job-A", prompt_tokens=list(range(2, 20)),
+                                max_tokens=8, final=True))
+    session = api._jobs["job-A"]
+    finished, _ = run_live(eng, [], timeout=90)
+    tools.shutdown()
+    r1 = f1.result(timeout=5)
+    r2 = f2.result(timeout=5)
+    assert len(r1["tokens"]) == 8 and len(r2["tokens"]) == 8
+    assert effects == [1]                      # the tool really ran
+    assert session.phase.value == "finished"
+    assert r2["ttft"] is not None
+    assert api.active_jobs() == []
+
+
+def test_serving_api_rejects_oversized_job():
+    from repro.engine.api import ChatRequest, ServingAPI
+    eng = Engine(EngineConfig(total_kv_blocks=10), "mars", BACKEND)
+    api = ServingAPI(eng)
+    fut = api.submit(ChatRequest(job_id="big", prompt_tokens=[1] * 50_000,
+                                 max_tokens=8, final=True))
+    with pytest.raises(RuntimeError, match="rejected"):
+        fut.result(timeout=1)

@@ -1,0 +1,142 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs the pure-jnp
+oracles, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.wkv6 import wkv6
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,D", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 8, 256, 256, 64),
+    (1, 8, 2, 64, 192, 128),
+    (2, 2, 1, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, Hq, Hkv, Sq, Skv, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D), dtype)
+    out = flash_attention(q, k, v, causal=True, q_offset=Skv - Sq,
+                          block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=Skv - Sq)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (64, None, True), (None, 30.0, True), (32, 50.0, True), (None, None, False),
+])
+def test_flash_attention_masking_variants(window, softcap, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,page,P,maxp", [
+    (4, 8, 2, 64, 32, 64, 8),
+    (2, 4, 4, 128, 16, 32, 4),
+    (1, 16, 8, 64, 32, 16, 6),
+    (3, 6, 2, 64, 8, 40, 10),
+])
+def test_paged_attention_shapes(B, Hq, Hkv, D, page, P, maxp):
+    rng = np.random.default_rng(B * 7 + P)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D), jnp.float32)
+    table = jnp.asarray(rng.integers(0, P, (B, maxp)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, maxp * page + 1, (B,)), jnp.int32)
+    out = paged_attention(q, kp, vp, table, lengths)
+    want = ref.paged_attention_ref(q, kp, vp, table, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_bf16():
+    rng = np.random.default_rng(0)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 4, 64), jnp.bfloat16)
+    kp = jax.random.normal(ks[1], (16, 16, 2, 64), jnp.bfloat16)
+    vp = jax.random.normal(ks[2], (16, 16, 2, 64), jnp.bfloat16)
+    table = jnp.asarray(rng.integers(0, 16, (2, 4)), jnp.int32)
+    lengths = jnp.asarray([30, 64], jnp.int32)
+    out = paged_attention(q, kp, vp, table, lengths)
+    want = ref.paged_attention_ref(q, kp, vp, table, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("B,T,H,K,chunk", [
+    (2, 64, 2, 32, 32), (1, 128, 4, 64, 32), (2, 96, 1, 64, 16),
+    (1, 32, 2, 32, 8),
+])
+def test_wkv6_shapes(B, T, H, K, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K), jnp.float32) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K), jnp.float32) * 0.5
+    w = jnp.exp(-jnp.exp(
+        jax.random.normal(ks[3], (B, T, H, K), jnp.float32) * 0.5 - 1.0))
+    u = jax.random.normal(ks[4], (H, K), jnp.float32) * 0.3
+    s0 = jax.random.normal(ks[0], (B, H, K, K), jnp.float32) * 0.1
+    o, sT = wkv6(r, k, v, w, u, s0, chunk=chunk)
+    o_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(s_ref), atol=5e-4)
+
+
+def test_wkv6_strong_decay_stability():
+    """Strong decay (w near clip floor) must not overflow the chunked form."""
+    B, T, H, K = 1, 64, 2, 32
+    r = jnp.ones((B, T, H, K)) * 0.3
+    k = jnp.ones((B, T, H, K)) * 0.3
+    v = jnp.ones((B, T, H, K))
+    w = jnp.full((B, T, H, K), 0.25)       # near the decay clip floor
+    u = jnp.zeros((H, K))
+    s0 = jnp.zeros((B, H, K, K))
+    o, sT = wkv6(r, k, v, w, u, s0, chunk=32)
+    o_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    assert np.isfinite(np.asarray(o)).all()
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_model_chunked_wkv_matches_ref():
+    from repro.models.rwkv6 import wkv6_chunked
+    ks = jax.random.split(KEY, 5)
+    B, T, H, K = 2, 96, 2, 32
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.4
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.4
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.4
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) * 0.3 - 1.5))
+    u = jax.random.normal(ks[4], (H, K)) * 0.2
+    s0 = jnp.zeros((B, H, K, K))
+    o, sT = wkv6_chunked(r, k, v, w, u, s0, chunk=16)
+    o_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(s_ref), atol=5e-4)
+
+
+def test_ops_dispatch():
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32), jnp.float32)
+    a = ops.attention(q, k, k, use_kernel=True)
+    b = ops.attention(q, k, k, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
