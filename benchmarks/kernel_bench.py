@@ -1,5 +1,8 @@
 """Kernel micro-bench: us/call for the Pallas kernels (interpret mode on
-CPU; on-TPU numbers are the target) vs the jnp oracles."""
+CPU; on-TPU numbers are the target) vs the jnp oracles.
+
+``--dry`` (CI smoke): tiny shapes, single rep — exercises every kernel
+entry point without the timing loops."""
 import time
 
 import jax
@@ -8,7 +11,7 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 
 
-def _time(fn, *args, reps=3):
+def _timed(fn, *args, reps=3):
     fn(*args)
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -17,10 +20,16 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(quick: bool = True):
+def _smoke(fn, *args, reps=1):
+    jax.block_until_ready(fn(*args))
+    return 0.0
+
+
+def run(quick: bool = True, dry: bool = False):
     rows = []
+    _time = _smoke if dry else _timed
     key = jax.random.PRNGKey(0)
-    B, Hq, Hkv, S, D = 1, 8, 2, 256, 64
+    B, Hq, Hkv, S, D = 1, 8, 2, 64 if dry else 256, 64
     q = jax.random.normal(key, (B, Hq, S, D), jnp.float32)
     k = jax.random.normal(key, (B, Hkv, S, D), jnp.float32)
     rows.append({"figure": "kernels", "name": "flash_attention_interp",
@@ -45,3 +54,16 @@ def run(quick: bool = True):
                  "us_per_call": round(_time(
                      lambda: ops.wkv(r_, r_, r_, w, u, s0, use_kernel=True)), 1)})
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke: tiny shapes, no timing loops")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for row in run(quick=not args.full, dry=args.dry):
+        print(json.dumps(row))

@@ -18,6 +18,7 @@ FIGURES = [
     "fig11_agent_loop",
     "fig13_ablation",
     "kernel_bench",
+    "kvcache_bench",
 ]
 
 

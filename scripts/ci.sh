@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Minimal CI smoke: tier-1 test suite + kernel entry-point smoke.
+# Mirrors ROADMAP.md "Tier-1 verify"; runs hermetically (no network,
+# hypothesis optional — tests fall back to tests/_hypo.py).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -x -q
+python benchmarks/kernel_bench.py --dry

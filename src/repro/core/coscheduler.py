@@ -22,9 +22,9 @@ Two mechanisms:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
-from repro.core.session import Session
+from repro.core.session import KVAction, Session
 from repro.core.telemetry import Telemetry
 
 
@@ -40,6 +40,12 @@ class CoSchedulerConfig:
     # -6% on H100 at ILR-2 with unchanged TTFT (EXPERIMENTS.md §Reproduction).
     pin_price_scale: float = 0.25
     block_size: int = 32
+    # three-way retention (host-DRAM tier). Offload pays one PCIe round trip
+    # but holds zero HBM: it wins exactly when recompute is expensive while
+    # pressure makes pinning too costly.
+    enable_offload: bool = True
+    offload_price: float = 0.5       # swap-out fraction charged (DMA/PCIe use)
+    offload_min_tokens: int = 4_096  # tiny contexts: recompute is cheaper
 
 
 class OpportunisticCoScheduler:
@@ -53,6 +59,9 @@ class OpportunisticCoScheduler:
         self.telem = telem
         self.recompute_time = recompute_time_fn
         self.prefill_rate = prefill_rate_fn or (lambda: 10_000.0)
+        # host-tier PCIe cost model, bound by the engine once the tier
+        # exists (None => no offload tier => binary pin/drop retention)
+        self.swap_seconds: Optional[Callable[[int], float]] = None
 
     # --- chunk shrinking ------------------------------------------------------
     def shrink_chunk(self, want_tokens: int, free_blocks: int) -> int:
@@ -107,6 +116,45 @@ class OpportunisticCoScheduler:
 
     def should_pin(self, s: Session, now: float) -> bool:
         return self.retention_score(s, now) > 0.0
+
+    # --- three-way retention --------------------------------------------------
+    def offload_net(self, s: Session, now: float) -> float:
+        """Net benefit (seconds) of parking this KV in host DRAM instead of
+        dropping it: warm restore avoids the prefix recompute but pays one
+        synchronous PCIe swap-in, plus a priced share of the (asynchronous)
+        swap-out for DMA/PCIe occupancy. Residency cost in HBM is zero —
+        that is the whole point of the tier."""
+        if (not self.cfg.enable_offload or self.swap_seconds is None
+                or s.resident_len < self.cfg.offload_min_tokens):
+            return float("-inf")
+        t_swap = self.swap_seconds(s.resident_len)
+        benefit = self.recompute_time(s.resident_len) - t_swap
+        return benefit - self.cfg.offload_price * t_swap
+
+    def retention_decision(self, s: Session, now: float) -> KVAction:
+        """PIN / OFFLOAD / FREE by comparing recompute time, swap-in time,
+        and pressure-priced HBM residency (paper §4.3, extended). PIN wins
+        ties: under slack its residency cost vanishes while offload always
+        pays the PCIe round trip."""
+        pin_net = self.retention_score(s, now)
+        off_net = self.offload_net(s, now)
+        if pin_net > 0.0 and pin_net >= off_net:
+            return KVAction.PIN
+        if off_net > 0.0:
+            return KVAction.OFFLOAD
+        return KVAction.FREE
+
+    def revoke_actions(self, pinned: Sequence[Session], now: float
+                       ) -> List[Tuple[Session, KVAction]]:
+        """Per-tick re-evaluation, three-way: pins whose retention score went
+        negative are revoked — to host DRAM when the offload tier still nets
+        positive, to a drop otherwise."""
+        out: List[Tuple[Session, KVAction]] = []
+        for s in pinned:
+            d = self.retention_decision(s, now)
+            if d != KVAction.PIN:
+                out.append((s, d))
+        return out
 
     def reclaim_order(self, pinned: Sequence[Session], now: float) -> List[Session]:
         """Pinned sessions in reclaim order (lowest retention score first)."""

@@ -30,6 +30,7 @@ UNPIN = "unpin"
 PREEMPT = "preempt"
 SWAP_OUT = "swap_out"
 SWAP_IN = "swap_in"
+PREFIX_HIT = "prefix_hit"      # cold prefill attached to shared radix blocks
 FINISH = "finish"
 
 

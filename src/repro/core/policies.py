@@ -15,7 +15,6 @@ paper's fairness requirement).
 """
 from __future__ import annotations
 
-import enum
 from dataclasses import dataclass, field
 from typing import List, Optional, Protocol, Sequence, Tuple
 
@@ -23,14 +22,8 @@ from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
 from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler
 from repro.core.events import EventBus
 from repro.core.mlfq import MLFQConfig, PriorityCoordinator
-from repro.core.session import KVState, Session
+from repro.core.session import KVAction, KVState, Session  # noqa: F401
 from repro.core.telemetry import Telemetry
-
-
-class KVAction(enum.Enum):
-    FREE = "free"
-    PIN = "pin"
-    SWAP = "swap"
 
 
 class PerfOracle(Protocol):
@@ -50,6 +43,12 @@ class Policy:
         self.telem = telem
         self.bus = bus
         self.oracle = oracle
+        self.host_tier = None          # bound by the engine when tiered
+
+    def bind_services(self, host_tier=None) -> None:
+        """Engine-owned KV services (host-DRAM tier) handed to the policy
+        after construction; baselines ignore them."""
+        self.host_tier = host_tier
 
     # --- admission (external) ----------------------------------------------
     def admit(self, queue: List[Session], now: float) -> List[Session]:
@@ -67,8 +66,18 @@ class Policy:
         """Pins to revoke this tick (TTL expiry / re-evaluation)."""
         return []
 
+    def revoke_actions(self, pinned: Sequence[Session], now: float
+                       ) -> List[Tuple[Session, KVAction]]:
+        """Three-way revocation: (session, FREE | OFFLOAD) per revoked pin.
+        Baselines drop; MARS may demote to the host tier instead."""
+        return [(s, KVAction.FREE) for s in self.tick_pinned(pinned, now)]
+
     def reclaim_order(self, pinned: Sequence[Session], now: float) -> List[Session]:
         return sorted(pinned, key=lambda s: s.pinned_since)
+
+    def reclaim_action(self, s: Session, now: float) -> KVAction:
+        """What to do with a pin reclaimed under allocation pressure."""
+        return KVAction.FREE
 
     # --- eviction/preemption ---------------------------------------------------
     def eviction_order(self, victims: Sequence[Session], now: float,
@@ -183,6 +192,15 @@ class MARSPolicy(Policy):
         if self.cfg.disable_coscheduler:
             self.name = "mars-no-cosched"
 
+    def bind_services(self, host_tier=None) -> None:
+        super().bind_services(host_tier)
+        self.cosched.swap_seconds = \
+            host_tier.swap_seconds if host_tier is not None else None
+
+    def _host_can_take(self, s: Session) -> bool:
+        return (self.host_tier is not None and self.host_tier.can_store(
+            -(-s.resident_len // self.cfg.cosched.block_size)))
+
     # external control plane
     def admit(self, queue, now):
         if self.cfg.disable_control_plane:
@@ -207,12 +225,15 @@ class MARSPolicy(Policy):
                        if v.arrival_time > requester.arrival_time]
         return self.coord.eviction_order(victims, now)
 
-    # opportunistic co-scheduler
+    # opportunistic co-scheduler (three-way adaptive retention, §4.3 ext.)
     def on_tool_yield(self, s, now):
         if self.cfg.disable_coscheduler:
             return KVAction.FREE, 0.0
-        if self.cosched.should_pin(s, now):
+        action = self.cosched.retention_decision(s, now)
+        if action == KVAction.PIN:
             return KVAction.PIN, float("inf")   # adaptive: revoked by ticks
+        if action == KVAction.OFFLOAD and self._host_can_take(s):
+            return KVAction.OFFLOAD, 0.0
         return KVAction.FREE, 0.0
 
     def tick_pinned(self, pinned, now):
@@ -220,10 +241,29 @@ class MARSPolicy(Policy):
             return list(pinned)
         return self.cosched.revoke_pins(pinned, now)
 
+    def revoke_actions(self, pinned, now):
+        if self.cfg.disable_coscheduler:
+            return [(s, KVAction.FREE) for s in pinned]
+        out = []
+        for s, action in self.cosched.revoke_actions(pinned, now):
+            if action == KVAction.OFFLOAD and not self._host_can_take(s):
+                action = KVAction.FREE
+            out.append((s, action))
+        return out
+
     def reclaim_order(self, pinned, now):
         if self.cfg.disable_coscheduler:
             return super().reclaim_order(pinned, now)
         return self.cosched.reclaim_order(pinned, now)
+
+    def reclaim_action(self, s, now):
+        """A pin reclaimed under pressure demotes to host DRAM when the
+        round trip still beats the recompute it would otherwise cause."""
+        if self.cfg.disable_coscheduler:
+            return KVAction.FREE
+        if self.cosched.offload_net(s, now) > 0.0 and self._host_can_take(s):
+            return KVAction.OFFLOAD
+        return KVAction.FREE
 
     def prefill_chunk(self, want_tokens, free_blocks, block_size):
         if self.cfg.disable_coscheduler:

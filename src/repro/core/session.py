@@ -25,7 +25,15 @@ class KVState(enum.Enum):
     NONE = "none"            # no resident KV (cold)
     RESIDENT = "resident"    # KV resident, session active on GPU
     PINNED = "pinned"        # KV retained across a tool phase
-    SWAPPED = "swapped"      # KV offloaded to host (InferCept baseline)
+    SWAPPED = "swapped"      # KV in host DRAM (legacy swap or host tier)
+
+
+class KVAction(enum.Enum):
+    """Retention outcome at a tool boundary (three-way under MARS)."""
+    FREE = "free"            # drop: rebuild by prefix recompute on resume
+    PIN = "pin"              # retain in HBM across the tool phase
+    SWAP = "swap"            # legacy host swap (InferCept's stock-vLLM path)
+    OFFLOAD = "offload"      # tiered host-DRAM offload (kvcache.host_tier)
 
 
 @dataclass

@@ -58,6 +58,15 @@ class Telemetry:
         # KV churn (preemption loss) EMA, in blocks — the congestion signal
         self.churn_ema = 0.0
         self._churn_accum = 0.0
+        # host-DRAM offload tier (kvcache.host_tier)
+        self.host_capacity_blocks = 0
+        self.host_used_blocks = 0
+        self.offload_stores = 0
+        self.offload_hits = 0
+        # cross-session prefix sharing (kvcache.radix)
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
         bus.subscribe(ev.TOOL_START, self._on_tool_start)
         bus.subscribe(ev.TOOL_END, self._on_tool_end)
         bus.subscribe(ev.PREEMPT, self._on_preempt)
@@ -109,10 +118,32 @@ class Telemetry:
         if self._kv_cold >= c.hysteresis_checks:
             self.kv_overloaded = False
 
+    def probe_host(self, used_blocks: int, capacity_blocks: int,
+                   stores: int, hits: int) -> None:
+        """Host-tier occupancy + hit-rate snapshot (same O(1) discipline as
+        the GPU probe: counters only, no byte math)."""
+        self.host_used_blocks = used_blocks
+        self.host_capacity_blocks = capacity_blocks
+        self.offload_stores = stores
+        self.offload_hits = hits
+
+    def probe_prefix(self, queries: int, hits: int, hit_tokens: int) -> None:
+        self.prefix_queries = queries
+        self.prefix_hits = hits
+        self.prefix_hit_tokens = hit_tokens
+
     # --- derived -------------------------------------------------------------
     @property
     def kv_utilization(self) -> float:
         return 1.0 - self.free_blocks / self.total_blocks
+
+    @property
+    def host_occupancy(self) -> float:
+        return self.host_used_blocks / max(1, self.host_capacity_blocks)
+
+    @property
+    def offload_hit_rate(self) -> float:
+        return self.offload_hits / max(1, self.offload_stores)
 
     def has_kv_slack(self) -> bool:
         """Healthy = low churn (a full-but-stable pool is slack for AIMD

@@ -25,7 +25,18 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.session import Session
+from repro.core.session import KVState, Session
+
+
+def _reset_kv_accounting(s: Session) -> None:
+    """A session leaving a replica loses its device-resident state; it will
+    resume elsewhere by prefix recompute. Without this reset the next
+    placement inherits phantom block accounting from the old replica."""
+    s.kv_blocks = 0
+    s.resident_len = 0
+    s.kv_state = KVState.NONE
+    s.meta.pop("swapped_len", None)
+    s.meta.pop("host_tier", None)
 
 
 @dataclass
@@ -71,6 +82,8 @@ class ClusterRouter:
         out: List[Session] = []
         if r is not None and r.engine is not None:
             out = list(r.engine.waiting) + list(r.engine.active)
+            for s in out:
+                _reset_kv_accounting(s)
         self.events.append({"t": now or time.monotonic(), "ev": "leave",
                             "rid": rid})
         return out
@@ -106,8 +119,7 @@ class ClusterRouter:
                 if r.engine is not None:
                     victims = list(r.engine.waiting) + list(r.engine.active)
                     for s in victims:
-                        s.kv_blocks = 0
-                        s.resident_len = 0
+                        _reset_kv_accounting(s)
                         self.requeued.append(s)
         return failed
 

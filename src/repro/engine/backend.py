@@ -57,6 +57,10 @@ class SimBackend:
     def swap_time(self, n_tokens: int) -> float:
         return pm.swap_time(self.cfg, self.hw, n_tokens)
 
+    def kv_bytes_per_token(self) -> float:
+        """KV footprint per token — sizes the host tier's PCIe cost model."""
+        return float(pm.kv_bytes_per_token(self.cfg))
+
     def prefill_rate(self) -> float:
         """Sustainable prefill tokens/s at a typical agentic context."""
         f = pm.flops_per_token(self.cfg, 64_000)
@@ -83,10 +87,16 @@ class SimBackend:
         t_memory = (self._w_bytes / tp + kv_read + kv_write) / \
             (hw.hbm_bw * tp * hw.mbu_decode)
         t = max(t_compute, t_memory)
-        # host<->device KV transfers serialize with the engine step (vLLM
-        # swapping is synchronous at scheduling boundaries)
+        # Host<->device KV transfers: the legacy swap path (stock vLLM
+        # swapper) serializes with the engine step in both directions. The
+        # host tier's batched-DMA path overlaps swap-OUT with the tool
+        # phase (HostTier.ready gates restorability), while swap-IN still
+        # serializes (decode needs the KV) at the tier's engineered rate
+        # (engine stamps ``meta["swap_cost_s"]``).
         for s, toks in work.swapins:
-            t += self.swap_time(toks)
+            cost = s.meta.pop("swap_cost_s", None)
+            t += self.swap_time(toks) if cost is None else cost
         for s, toks in work.swapouts:
-            t += self.swap_time(toks)
+            if not s.meta.get("host_tier"):
+                t += self.swap_time(toks)
         return t

@@ -1,8 +1,10 @@
-"""Paged-KV block pool (capacity plane).
+"""Paged-KV block pool (capacity plane) — counter-only legacy manager.
 
-The engine tracks *capacity* in the allocator's native unit (blocks); the
-physical placement of pages (block id -> HBM page) is owned by the execution
-backend (``jax_runner`` keeps its own tables, the simulator needs none).
+The engine now runs on ``repro.kvcache.pool.BlockPool`` (block identity,
+refcounts, copy-on-write, radix-cached blocks) behind the same ``probe()``
+surface defined here. ``BlockManager`` remains as the minimal count-based
+reference implementation (unit tests pin its arithmetic).
+
 ``probe()`` is the O(1) read the unified info stream exports — free-list and
 usage counters only, no byte math, no device sync (paper §4.1).
 """

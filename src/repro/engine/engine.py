@@ -3,18 +3,25 @@
 One ``tick`` is one engine iteration:
 
     1. drain tool completions (unified info stream)      -> sessions resume
-    2. O(1) block-pool + backlog probe                   -> telemetry
-    3. external admission (policy.admit; MARS = Alg. 1)
-    4. pin re-evaluation (adaptive retention / TTL expiry)
+    2. O(1) block-pool + host-tier + backlog probe       -> telemetry
+    3. external admission (policy.admit; MARS = Alg. 1);
+       cold prefills attach to shared radix-indexed prefix blocks
+    4. pin re-evaluation (adaptive three-way retention / TTL expiry):
+       revoked pins drop or demote to the host-DRAM tier
     5. batch formation: decodes first (priority order), then chunked
        prefills under the token budget; chunk shrinking; pinned KV is
-       reclaimed before any running victim is preempted
+       reclaimed (drop or offload) before any running victim is preempted;
+       completed host transfers drain back as swap-ins
     6. backend.run_batch (sim: modeled seconds; jax: wall seconds)
     7. bookkeeping: TTFT per round, tool yields + retention decisions,
        completion accounting
 
 The same loop drives the discrete-event simulator and the live JAX engine —
 only the backend, the tool executor, and the clock differ.
+
+KV capacity is governed by the tiered subsystem (``repro.kvcache``): a
+block-identity pool with refcounts/copy-on-write, a radix prefix index for
+cross-session sharing, and a host-DRAM offload tier.
 """
 from __future__ import annotations
 
@@ -28,8 +35,8 @@ from repro.core.policies import KVAction, MARSConfig, Policy, make_policy
 from repro.core.session import KVState, Phase, Round, Session
 from repro.core.telemetry import Telemetry, TelemetryConfig
 from repro.engine.backend import BatchWork
-from repro.engine.block_manager import BlockManager
 from repro.engine.tools import SimToolExecutor
+from repro.kvcache import BlockPool, HostTier, HostTierConfig, RadixIndex
 
 
 @dataclass
@@ -41,6 +48,9 @@ class EngineConfig:
     decode_granularity: int = 8
     cpu_slots: int = 16
     telem: TelemetryConfig = None     # derived from cpu_slots if None
+    enable_prefix_sharing: bool = True  # radix index over prefix chunk hashes
+    host_tier_blocks: int = -1        # host-DRAM tier capacity; -1 => 4x HBM
+    host_pcie_bw: float = 24e9        # batched-DMA effective bytes/s
 
     def __post_init__(self):
         if self.telem is None:
@@ -54,10 +64,23 @@ class Engine:
         self.cfg = cfg
         self.bus = bus or EventBus()
         self.backend = backend
-        self.blocks = BlockManager(cfg.total_kv_blocks, cfg.block_size)
+        self.blocks = BlockPool(cfg.total_kv_blocks, cfg.block_size)
+        self.radix: Optional[RadixIndex] = (
+            RadixIndex(self.blocks, chunk_tokens=cfg.block_size)
+            if cfg.enable_prefix_sharing else None)
+        host_blocks = (4 * cfg.total_kv_blocks if cfg.host_tier_blocks < 0
+                       else cfg.host_tier_blocks)
+        bpt_fn = getattr(backend, "kv_bytes_per_token", None)
+        self.host: Optional[HostTier] = (
+            HostTier(HostTierConfig(capacity_blocks=host_blocks,
+                                    pcie_bw=cfg.host_pcie_bw),
+                     bytes_per_token=(bpt_fn() if bpt_fn else 64 * 1024),
+                     block_size=cfg.block_size)
+            if host_blocks > 0 else None)
         self.telem = Telemetry(cfg.telem, self.bus)
         self.policy: Policy = make_policy(policy_name, self.telem, self.bus,
                                           backend, mars_cfg)
+        self.policy.bind_services(host_tier=self.host)
         self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
         self.waiting: List[Session] = []
         self.active: List[Session] = []
@@ -65,6 +88,9 @@ class Engine:
         self.finished: List[Session] = []
         self.rejected: List[Session] = []
         self._pending_swapouts: List[Tuple[Session, int]] = []
+        # benchmark counters (kvcache_bench reads these)
+        self.prefill_tokens_computed = 0
+        self.prefix_hit_tokens = 0
 
     # ------------------------------------------------------------------
     def submit(self, s: Session) -> None:
@@ -80,25 +106,55 @@ class Engine:
             self.bus.emit("reject", s.arrival_time, s.sid,
                           tokens=total_tokens)
             return
+        hashes = s.meta.get("prefix_hashes")
+        if hashes is not None:
+            # the radix assumes one chunk == one KV block; a workload
+            # chunked at a different granularity must not attach (block
+            # accounting would drift) — disable sharing for the session
+            bs = self.cfg.block_size
+            if (not hashes or any(n != bs for _, n in hashes[:-1])
+                    or not 0 < hashes[-1][1] <= bs):
+                s.meta.pop("prefix_hashes")
         s.phase = Phase.WAITING_ADMIT
         self.waiting.append(s)
 
     def done(self) -> bool:
         return not self.waiting and not self.active
 
-    def next_timer_event(self) -> Optional[float]:
-        """Earliest pinned-KV TTL expiry (finite TTLs only) — the sim driver
-        must not jump the clock past policy timers."""
+    def next_timer_event(self, now: float = float("-inf")) -> Optional[float]:
+        """Earliest pinned-KV TTL expiry (finite TTLs only) and earliest
+        *future* host-tier transfer completion — the sim driver must not
+        jump the clock past policy timers or in-flight DMA. Completed
+        transfers are not timers: their sessions restore whenever the tool
+        ends and blocks free up."""
         ts = [s.pinned_since + s.pin_ttl for s in self.pinned
               if s.pin_ttl != float("inf")]
+        if self.host is not None:
+            t_host = self.host.next_event_time(now)
+            if t_host is not None:
+                ts.append(t_host)
         return min(ts) if ts else None
 
     def check_invariants(self) -> None:
-        """Block-accounting and state-machine invariants (used by tests)."""
+        """Block-, refcount- and state-machine invariants (used by tests).
+
+        With prefix sharing, per-session logical holdings (lease entries)
+        can exceed physical occupancy; the exact identities are:
+        ``free + physical_in_use == total`` and ``sum(refcounts) ==
+        sum(session.kv_blocks)``."""
         held = sum(s.kv_blocks for s in self.active)
-        assert self.blocks.free + held == self.blocks.total, \
-            f"block leak: free={self.blocks.free} held={held} " \
-            f"total={self.blocks.total}"
+        p = self.blocks.probe()
+        assert p.free + p.physical == p.total, \
+            f"physical leak: free={p.free} physical={p.physical} " \
+            f"total={p.total}"
+        assert p.leased == held, \
+            f"lease accounting: leased={p.leased} held={held}"
+        assert held >= p.physical or held == 0, "refcount underflow"
+        self.blocks.check_consistency()
+        for s in self.active:
+            assert s.kv_blocks == self.blocks.lease_len(s.sid), \
+                f"sid {s.sid}: kv_blocks={s.kv_blocks} " \
+                f"lease={self.blocks.lease_len(s.sid)}"
         pinned = sum(s.kv_blocks for s in self.pinned)
         assert self.blocks.pinned == pinned, \
             f"pin accounting: {self.blocks.pinned} != {pinned}"
@@ -109,6 +165,16 @@ class Engine:
             assert s.resident_len <= s.kv_blocks * self.cfg.block_size
         for s in self.finished:
             assert s.kv_blocks == 0 and s.phase == Phase.FINISHED
+        if self.host is not None:
+            tiered = [s for s in self.active
+                      if s.kv_state == KVState.SWAPPED
+                      and s.meta.get("host_tier")]
+            for s in tiered:
+                assert self.host.holds(s.sid), f"lost host entry {s.sid}"
+            want = sum(self.blocks.blocks_for(s.meta.get("swapped_len", 0))
+                       for s in tiered)
+            assert self.host.used_blocks == want, \
+                f"host occupancy: {self.host.used_blocks} != {want}"
 
     # ------------------------------------------------------------------
     def tick(self, now: float) -> Tuple[float, bool]:
@@ -134,9 +200,20 @@ class Engine:
                 progressed = True
             if admitted:
                 self._probe()
-        # 4. pin re-evaluation
-        for s in list(self.policy.tick_pinned(self.pinned, now)):
-            self._release_kv(s, now, reason="pin_revoked")
+        # 3.5 cross-session prefix sharing: round-0 prefills (cold, or mid-
+        # build at a block-aligned boundary) attach to radix-indexed blocks
+        # of sessions that already built the shared context
+        if self.radix is not None:
+            for s in self.active:
+                if (s.phase == Phase.READY_PREFILL and s.cur_round == 0
+                        and s.decoded == 0
+                        and s.kv_state in (KVState.NONE, KVState.RESIDENT)
+                        and s.resident_len % self.cfg.block_size == 0
+                        and self._attach_prefix(s, now)):
+                    progressed = True
+        # 4. pin re-evaluation (three-way: keep / offload / drop)
+        for s, action in list(self.policy.revoke_actions(self.pinned, now)):
+            self._revoke_pin(s, now, action, reason="pin_revoked")
             progressed = True
         # 5-6. batch formation + execution
         work = self._form_batch(now)
@@ -159,6 +236,122 @@ class Engine:
         n_dec = sum(1 for s in self.active if s.phase == Phase.DECODING)
         self.telem.probe_gpu(p.total, p.free, p.pinned, len(self.active),
                              n_dec, max(0, waiting_blocks))
+        if self.host is not None:
+            self.telem.probe_host(self.host.used_blocks,
+                                  self.host.capacity_blocks,
+                                  self.host.stores, self.host.hits)
+        if self.radix is not None:
+            self.telem.probe_prefix(self.radix.queries, self.radix.hits,
+                                    self.radix.hit_tokens)
+
+    # --- tiered KV helpers ---------------------------------------------
+    def _attach_prefix(self, s: Session, now: float) -> bool:
+        """Attach to the longest indexed prefix of this session's chunk
+        hashes beyond what it already built (shared physical blocks, no
+        recompute). Works cold *and* mid-prefill at block-aligned
+        boundaries, so a family member that started before the canonical
+        builder finished still catches up to freshly indexed blocks.
+        Reviving cached blocks consumes free capacity, so the match is
+        trimmed to what fits above the decode watermark."""
+        hashes = s.meta.get("prefix_hashes")
+        if not hashes:
+            return False
+        held = s.kv_blocks
+        if held * self.cfg.block_size != s.resident_len:
+            return False          # partial tail block: not chunk-aligned
+        matched = self.radix.match(hashes)
+        if len(matched) <= held:
+            return False
+        matched = matched[held:]  # the already-built prefix stays private
+        avail = max(0, self.blocks.free - self._watermark())
+        n_revive = sum(1 for bid, _ in matched if self.blocks.is_cached(bid))
+        while matched and n_revive > avail:
+            bid, _ = matched.pop()
+            if self.blocks.is_cached(bid):
+                n_revive -= 1
+        if not matched:
+            return False
+        bids = [b for b, _ in matched]
+        toks = sum(n for _, n in matched)
+        self.blocks.acquire(s.sid, bids)
+        s.kv_blocks += len(bids)
+        s.resident_len += toks
+        s.context_len = max(s.context_len, s.resident_len)
+        s.kv_state = KVState.RESIDENT
+        self.prefix_hit_tokens += toks
+        self.bus.emit(ev.PREFIX_HIT, now, s.sid, tokens=toks,
+                      blocks=len(bids))
+        if s.pending_prefill <= 0:       # full duplicate: nothing to build
+            s.phase = Phase.DECODING
+        return True
+
+    def _insert_prefix_progress(self, s: Session) -> None:
+        """Index every fully-built round-0 chunk so far (vLLM/sglang style
+        incremental prefix caching): later family members attach to the
+        shared context *while* the first builder is still prefilling. The
+        partial tail chunk is indexed only once round 0 completes."""
+        hashes = s.meta.get("prefix_hashes")
+        if not hashes:
+            return
+        done = s.meta.get("prefix_chunks_indexed", 0)
+        if s.pending_prefill <= 0:
+            m = len(hashes)          # completion: partial tail included
+        else:
+            m, cum = 0, 0
+            for _, n_tok in hashes:
+                if cum + n_tok > s.resident_len or n_tok < self.cfg.block_size:
+                    break
+                cum += n_tok
+                m += 1
+        if m <= done:
+            return
+        lease = self.blocks.lease(s.sid)
+        if len(lease) < m:
+            return
+        self.radix.insert(hashes[:m], lease[:m])
+        s.meta["prefix_chunks_indexed"] = m
+        if m == len(hashes):
+            s.meta["radix_inserted"] = True
+
+    def _offload_kv(self, s: Session, now: float) -> bool:
+        """Demote resident KV to the host-DRAM tier: device blocks free
+        immediately; the (asynchronous) transfer gates restorability."""
+        if self.host is None or s.kv_blocks <= 0:
+            return False
+        host_blocks = self.blocks.blocks_for(s.resident_len)
+        if not self.host.can_store(host_blocks):
+            return False
+        self.host.store(s.sid, s.resident_len, host_blocks, now)
+        s.meta["swapped_len"] = s.resident_len
+        s.meta["host_tier"] = True
+        self._pending_swapouts.append((s, s.resident_len))
+        freed = self.blocks.release_all(s.sid)
+        assert freed == s.kv_blocks
+        self.bus.emit(ev.SWAP_OUT, now, s.sid, blocks=s.kv_blocks,
+                      tier="host")
+        s.kv_blocks = 0
+        s.resident_len = 0
+        s.kv_state = KVState.SWAPPED
+        return True
+
+    def _revoke_pin(self, s: Session, now: float, action: KVAction,
+                    reason: str) -> None:
+        self.blocks.unpin(s.kv_blocks)
+        if s in self.pinned:
+            self.pinned.remove(s)
+        s.kv_state = KVState.RESIDENT
+        if action == KVAction.OFFLOAD and self._offload_kv(s, now):
+            self.bus.emit(ev.UNPIN, now, s.sid, warm=False, to="host")
+        else:
+            self._release_kv(s, now, reason=reason)
+
+    def _drop_host_copy(self, s: Session) -> None:
+        """Abandon a host-tier entry (recompute fallback / release)."""
+        if s.meta.pop("host_tier", None) and self.host is not None:
+            self.host.drop(s.sid)
+            drop = getattr(self.backend, "drop_host", None)
+            if drop is not None:
+                drop(s.sid)
 
     def _resume_from_tool(self, s: Session, now: float) -> None:
         if s in self.pinned:
@@ -179,8 +372,13 @@ class Engine:
             self.blocks.unpin(s.kv_blocks)
             if s in self.pinned:
                 self.pinned.remove(s)
+        if s.kv_state == KVState.SWAPPED:
+            self._drop_host_copy(s)
+            s.meta["swapped_len"] = 0
         if s.kv_blocks:
-            self.blocks.release(s.kv_blocks)
+            freed = self.blocks.release_all(s.sid)
+            assert freed == s.kv_blocks, \
+                f"lease mismatch on release: {freed} != {s.kv_blocks}"
             self.bus.emit(ev.EVICT, now, s.sid, blocks=s.kv_blocks,
                           reason=reason)
         s.kv_blocks = 0
@@ -208,7 +406,8 @@ class Engine:
         if self.blocks.free >= n:
             return True
         for s in self.policy.reclaim_order(list(self.pinned), now):
-            self._release_kv(s, now, reason="reclaim")
+            self._revoke_pin(s, now, self.policy.reclaim_action(s, now),
+                             reason="reclaim")
             if self.blocks.free >= n:
                 return True
         if not allow_preempt:
@@ -243,12 +442,20 @@ class Engine:
             if g <= 0:
                 continue
             need = self.blocks.blocks_for(s.resident_len + g) - s.kv_blocks
-            if need > 0:
-                if not self._ensure_blocks(need, now, in_batch, s,
+            # writing into a shared/indexed partial tail block requires a
+            # copy-on-write (one extra physical block while the original
+            # keeps its content for the other referents)
+            cow = 1 if (s.resident_len % c.block_size != 0
+                        and self.blocks.tail_needs_cow(s.sid)) else 0
+            if need + cow > 0:
+                if not self._ensure_blocks(need + cow, now, in_batch, s,
                                            allow_preempt=True):
                     continue
-                self.blocks.alloc(need)
-                s.kv_blocks += need
+                if need > 0:
+                    self.blocks.alloc(s.sid, need)
+                    s.kv_blocks += need
+                if cow:
+                    self.blocks.copy_on_write(s.sid)
             decodes.append((s, g))
             in_batch.add(s.sid)
             budget -= g
@@ -291,18 +498,31 @@ class Engine:
         avail = max(0, self.blocks.free - reserve)
         if s.kv_state == KVState.SWAPPED:
             toks = s.meta.get("swapped_len", 0)
+            tiered = bool(s.meta.get("host_tier")) and self.host is not None
             need = self.blocks.blocks_for(toks)
-            if need > avail and not self._ensure_blocks(
-                    need + reserve, now, in_batch, s, allow_preempt):
-                if allow_preempt:        # cannot restore: fall back to recompute
-                    s.kv_state = KVState.NONE
-                    s.meta["swapped_len"] = 0
+            if tiered and not self.host.ready(s.sid, now):
+                # transfer still in flight: it completes at a known future
+                # time (exported via next_timer_event), so waiting is both
+                # live and strictly cheaper than abandoning to recompute
                 return False
-            self.blocks.alloc(need)
-            s.kv_blocks += need
-            swapins.append((s, toks))
-            in_batch.add(s.sid)
-            return True
+            if need <= avail or self._ensure_blocks(
+                    need + reserve, now, in_batch, s, allow_preempt):
+                self.blocks.alloc(s.sid, need)
+                s.kv_blocks += need
+                if tiered:           # engineered-DMA restore time, not the
+                    s.meta["swap_cost_s"] = \
+                        self.host.swap_seconds(toks)   # stock swapper's
+                swapins.append((s, toks))
+                in_batch.add(s.sid)
+                return True
+            if not allow_preempt:
+                return False
+            # stall escape hatch: restore blocked on *capacity* with nothing
+            # else schedulable — no timer will fix that, so abandon the host
+            # copy and rebuild by recompute (deadlock freedom).
+            self._drop_host_copy(s)
+            s.kv_state = KVState.NONE
+            s.meta["swapped_len"] = 0
         want = min(s.pending_prefill, budget)
         if want <= 0:
             return False
@@ -317,11 +537,15 @@ class Engine:
             if chunk <= 0:
                 return False
         need = self.blocks.blocks_for(s.resident_len + chunk) - s.kv_blocks
-        if need > self.blocks.free:
+        cow = 1 if (s.resident_len % c.block_size != 0
+                    and self.blocks.tail_needs_cow(s.sid)) else 0
+        if need + cow > self.blocks.free:
             return False
         if need > 0:
-            self.blocks.alloc(need)
+            self.blocks.alloc(s.sid, need)
             s.kv_blocks += need
+        if cow:
+            self.blocks.copy_on_write(s.sid)
         s.kv_state = KVState.RESIDENT
         prefills.append((s, chunk))
         in_batch.add(s.sid)
@@ -336,13 +560,22 @@ class Engine:
             s.resident_len = toks
             s.kv_state = KVState.RESIDENT
             s.meta["swapped_len"] = 0
-            self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks)
+            if s.meta.pop("host_tier", None) and self.host is not None:
+                self.host.load(s.sid, end)       # tier hit: occupancy freed
+                self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,
+                              tier="host")
+            else:
+                self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks)
             if s.pending_prefill <= 0:
                 s.phase = Phase.DECODING
         for s, chunk in work.prefills:
             s.resident_len += chunk
             s.context_len = max(s.context_len, s.resident_len)
+            self.prefill_tokens_computed += chunk
             self._account(s, chunk, elapsed, total_tokens, end)
+            if (self.radix is not None and s.cur_round == 0
+                    and not s.meta.get("radix_inserted")):
+                self._insert_prefix_progress(s)
             if s.pending_prefill <= 0:
                 s.phase = Phase.DECODING
         for s, g in work.decodes:
@@ -376,7 +609,8 @@ class Engine:
             self.finished.append(s)
             self.bus.emit(ev.FINISH, now, s.sid, latency=s.e2e_latency)
             return
-        # yield to tool; retention decision
+        # yield to tool; retention decision (three-way under MARS:
+        # PIN keeps HBM, OFFLOAD demotes to host DRAM, FREE recomputes)
         r = s.cur
         action, ttl = self.policy.on_tool_yield(s, now)
         if action == KVAction.PIN and s.kv_blocks > 0:
@@ -387,13 +621,19 @@ class Engine:
             self.pinned.append(s)
             self.bus.emit(ev.PIN, now, s.sid, blocks=s.kv_blocks, ttl=ttl)
         elif action == KVAction.SWAP and s.kv_blocks > 0:
+            # legacy path (InferCept baseline): stock-swapper timing, no
+            # tier accounting — the backend charges swap_time() per side
             s.meta["swapped_len"] = s.resident_len
-            self.blocks.release(s.kv_blocks)
+            freed = self.blocks.release_all(s.sid)
+            assert freed == s.kv_blocks
             self.bus.emit(ev.SWAP_OUT, now, s.sid, blocks=s.kv_blocks)
             self._pending_swapouts.append((s, s.resident_len))
             s.kv_blocks = 0
             s.resident_len = 0
             s.kv_state = KVState.SWAPPED
+        elif (action == KVAction.OFFLOAD and s.kv_blocks > 0
+              and self._offload_kv(s, now)):
+            pass
         else:
             self._release_kv(s, now, reason="tool_free")
         s.phase = Phase.TOOL
@@ -433,7 +673,7 @@ def run_sim(engine: Engine, sessions: List[Session], *, max_time: float = 1e7,
         t_tool = engine.tools.next_event_time()
         if t_tool is not None:
             candidates.append(t_tool)
-        t_timer = engine.next_timer_event()
+        t_timer = engine.next_timer_event(now)
         if t_timer is not None:
             candidates.append(t_timer)
         if i < len(arrivals):

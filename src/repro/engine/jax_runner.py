@@ -54,6 +54,7 @@ class JaxBackend:
         self.cache = model_zoo.cache_zeros(cfg, max_slots, max_len, dtype)
         self._slots: Dict[int, int] = {}          # sid -> slot
         self._free_slots = list(range(max_slots))
+        self._host_kv: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
         def _decode(params, cache, tokens, positions):
             logits, cache = lm_step(cfg, params, cache, tokens[:, None],
@@ -115,6 +116,15 @@ class JaxBackend:
             nxt.block_until_ready()
 
         self._decode_s_per_step = self._time_once(df)
+        # host<->device bandwidth for the offload tier: one slot round trip
+        slot_bytes = 2 * self.cache.k[:, 0].size * self.cache.k.dtype.itemsize
+
+        def xfer():
+            host = (jax.device_get(self.cache.k[:, 0]),
+                    jax.device_get(self.cache.v[:, 0]))
+            jnp.asarray(host[0]).block_until_ready()
+
+        self._h2d_bw = max(1e6, slot_bytes / self._time_once(xfer))
 
     def recompute_time(self, n_tokens: int) -> float:
         return n_tokens * self._prefill_s_per_tok
@@ -123,13 +133,45 @@ class JaxBackend:
         return 1.0 / self._prefill_s_per_tok
 
     def swap_time(self, n_tokens: int) -> float:
-        return 1e9   # live runner does not implement host offload
+        """Measured host<->device KV bandwidth for the slot-copy path."""
+        return 1e-3 + n_tokens * self.kv_bytes_per_token() / self._h2d_bw
+
+    def kv_bytes_per_token(self) -> float:
+        k = self.cache.k
+        # (L, S, T, H, D) slot-dense layout: bytes per token = all-but-T dims
+        per_tok = 2 * k.size // (k.shape[1] * k.shape[2]) * k.dtype.itemsize
+        return float(per_tok)
+
+    # --- host offload (the live analogue of kvcache.host_tier) -----------
+    def _swap_out(self, s: Session) -> None:
+        slot = self._slots.get(s.sid)
+        if slot is None:
+            return
+        self._host_kv[s.sid] = (jax.device_get(self.cache.k[:, slot]),
+                                jax.device_get(self.cache.v[:, slot]))
+        self.release_session(s.sid)
+
+    def _swap_in(self, s: Session) -> None:
+        host = self._host_kv.pop(s.sid, None)
+        if host is None:
+            return
+        slot = self._slot_of(s.sid)
+        k = self.cache.k.at[:, slot].set(jnp.asarray(host[0]))
+        v = self.cache.v.at[:, slot].set(jnp.asarray(host[1]))
+        self.cache = KVCache(k, v)
+
+    def drop_host(self, sid: int) -> None:
+        self._host_kv.pop(sid, None)
 
     # --- execution ------------------------------------------------------------
     def run_batch(self, work: BatchWork, now: float) -> float:
         if work.empty:
             return 0.0
         t0 = time.monotonic()
+        for s, _toks in work.swapouts:
+            self._swap_out(s)
+        for s, _toks in work.swapins:
+            self._swap_in(s)
         for s, chunk in work.prefills:
             self._run_prefill(s, chunk)
         if work.decodes:

@@ -31,17 +31,22 @@ class SimToolExecutor:
     def start(self, s: Session, kind: str, duration: float, now: float) -> None:
         self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind)
         self._seq += 1
+        seq = self._seq
         if len(self._running) < self.cpu_slots:
-            self._begin(s, kind, duration, now)
+            self._begin(s, kind, duration, now, seq)
         else:
-            self._waiting.append((now, self._seq, s, duration, kind))
+            self._waiting.append((now, seq, s, duration, kind))
 
-    def _begin(self, s: Session, kind: str, duration: float, now: float) -> None:
+    def _begin(self, s: Session, kind: str, duration: float, now: float,
+               seq: int) -> None:
+        # the per-item seq (not the global counter) keeps heap entries unique:
+        # a queued tool re-begun from poll() must never collide with a seq
+        # already in the heap, or tuple comparison falls through to Session.
         s.tool_started = now
         s.meta["tool_kind_running"] = kind
         s.meta["tool_duration"] = duration
         self.bus.emit(ev.TOOL_START, now, s.sid, kind=kind)
-        heapq.heappush(self._running, (now + duration, self._seq, s))
+        heapq.heappush(self._running, (now + duration, seq, s))
 
     def poll(self, now: float) -> List[Session]:
         """Tools completed by ``now``; starts queued tools as slots free up."""
@@ -54,7 +59,7 @@ class SimToolExecutor:
             done.append(s)
             if self._waiting:
                 t0, seq, w, dur, kind = self._waiting.pop(0)
-                self._begin(w, kind, dur, end)
+                self._begin(w, kind, dur, end, seq)
         return done
 
     def next_event_time(self) -> Optional[float]:

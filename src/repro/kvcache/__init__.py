@@ -1,0 +1,17 @@
+"""Tiered KV-state subsystem.
+
+Three layers that together replace the counter-only block manager:
+
+* ``pool``      — block-identity pool: per-block refcounts, copy-on-write,
+                  radix-cached (evictable) blocks, per-session leases.
+* ``radix``     — prefix index over hashed token chunks: sessions sharing a
+                  repository context share physical KV blocks.
+* ``host_tier`` — host-DRAM offload tier with a PCIe-bandwidth cost model;
+                  the third retention outcome (PIN / OFFLOAD / DROP).
+"""
+from repro.kvcache.host_tier import HostTier, HostTierConfig
+from repro.kvcache.pool import BlockPool, TieredPoolProbe
+from repro.kvcache.radix import RadixIndex
+
+__all__ = ["BlockPool", "TieredPoolProbe", "RadixIndex", "HostTier",
+           "HostTierConfig"]

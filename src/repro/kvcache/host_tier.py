@@ -1,0 +1,108 @@
+"""Host-DRAM offload tier: the third retention outcome.
+
+Capacity-accounted KV residency in host memory with a PCIe-bandwidth cost
+model. Unlike the legacy swap path (InferCept's stock-vLLM swapper: per-
+layer-per-block scattered DMAs, ~3 GB/s effective, serialized with the
+engine step), this tier models an engineered batched-DMA path:
+
+* swap-OUT is asynchronous — the copy overlaps tool execution on the DMA
+  engine; the entry only becomes *restorable* once the transfer completes
+  (``ready_at`` on the sim clock);
+* swap-IN is synchronous — decode needs the KV, so restore time serializes
+  with the engine step (the execution backend charges
+  ``meta["swap_cost_s"]``).
+
+On the live ``jax_runner`` path the same BatchWork swap entries are executed
+with real ``jax.device_get`` / ``jax.device_put`` of the slot's cache region.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass
+class HostTierConfig:
+    capacity_blocks: int = 32_768
+    pcie_bw: float = 24e9          # bytes/s, batched contiguous DMA
+    base_latency_s: float = 5e-4   # per-transfer setup
+
+
+@dataclass
+class _Entry:
+    tokens: int
+    blocks: int
+    ready_at: float
+
+
+class HostTier:
+    def __init__(self, cfg: HostTierConfig, bytes_per_token: float,
+                 block_size: int):
+        self.cfg = cfg
+        self.bytes_per_token = max(1.0, float(bytes_per_token))
+        self.block_size = block_size
+        self._entries: Dict[int, _Entry] = {}
+        # stats
+        self.stores = 0
+        self.hits = 0           # completed swap-ins (offload paid off)
+        self.drops = 0          # entries abandoned (recompute fallback / free)
+        self.bytes_moved = 0.0
+
+    # --- cost model ----------------------------------------------------
+    def swap_seconds(self, n_tokens: int) -> float:
+        if n_tokens <= 0:
+            return 0.0
+        return self.cfg.base_latency_s + \
+            n_tokens * self.bytes_per_token / self.cfg.pcie_bw
+
+    # --- occupancy -----------------------------------------------------
+    @property
+    def capacity_blocks(self) -> int:
+        return self.cfg.capacity_blocks
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(e.blocks for e in self._entries.values())
+
+    def can_store(self, blocks: int) -> bool:
+        return self.used_blocks + blocks <= self.cfg.capacity_blocks
+
+    def holds(self, sid: int) -> bool:
+        return sid in self._entries
+
+    # --- lifecycle -----------------------------------------------------
+    def store(self, sid: int, tokens: int, blocks: int, now: float) -> float:
+        """Register an offload; returns transfer seconds (DMA overlaps the
+        tool phase; the entry is restorable from ``now + seconds``)."""
+        assert sid not in self._entries, f"double offload of sid {sid}"
+        sec = self.swap_seconds(tokens)
+        self._entries[sid] = _Entry(tokens, blocks, now + sec)
+        self.stores += 1
+        self.bytes_moved += tokens * self.bytes_per_token
+        return sec
+
+    def ready(self, sid: int, now: float) -> bool:
+        e = self._entries.get(sid)
+        return e is not None and now >= e.ready_at
+
+    def load(self, sid: int, now: float) -> int:
+        """Swap-in completed: release host capacity, count the hit."""
+        e = self._entries.pop(sid)
+        self.hits += 1
+        self.bytes_moved += e.tokens * self.bytes_per_token
+        return e.tokens
+
+    def drop(self, sid: int) -> None:
+        """Abandon an entry (session fell back to recompute or finished)."""
+        if self._entries.pop(sid, None) is not None:
+            self.drops += 1
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        """Earliest in-flight transfer completion after ``now`` — the sim
+        driver must not jump the clock past it while a restore is gated."""
+        ts = [e.ready_at for e in self._entries.values() if e.ready_at > now]
+        return min(ts) if ts else None
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.stores)

@@ -1,0 +1,209 @@
+"""Block-identity KV pool: refcounts, copy-on-write, cached (evictable) blocks.
+
+Supersedes the counter-only ``engine.block_manager.BlockManager`` behind the
+same ``probe()`` surface (``total`` / ``free`` / ``pinned``), adding:
+
+* **identity** — physical blocks have ids; sessions hold ordered *leases*
+  (one logical block reference per lease entry), so two sessions prefix-
+  sharing a repository context reference the *same* physical blocks;
+* **refcounts** — a physical block is freed only when its last reference
+  drops; a block registered in the radix index instead parks on an evictable
+  LRU ("cached": content retained, capacity counted as free, reclaimed on
+  allocation pressure with a callback into the index);
+* **copy-on-write** — writing into a partially-filled tail block that is
+  shared (refcount > 1) or index-registered first copies it to a private
+  block, so cached prefix content stays pristine for future matchers.
+
+Capacity semantics the engine relies on: ``free`` counts allocatable blocks
+*including* cached ones; ``free + physical_in_use == total`` always holds.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.engine.block_manager import BlockPoolProbe
+
+
+class TieredPoolProbe(BlockPoolProbe):
+    """O(1) probe extended with sharing/caching counters."""
+
+    def __init__(self, total: int, free: int, pinned: int, *,
+                 cached: int, leased: int, physical: int, cow_count: int):
+        super().__init__(total, free, pinned)
+        self.cached = cached          # evictable blocks retaining content
+        self.leased = leased          # logical refs held by sessions
+        self.physical = physical      # blocks with refcount >= 1
+        self.cow_count = cow_count
+
+
+class BlockPool:
+    def __init__(self, total_blocks: int, block_size: int = 32):
+        assert total_blocks > 0
+        self.total = total_blocks
+        self.block_size = block_size
+        self.pinned = 0
+        self.cow_count = 0
+        self._free_ids: List[int] = list(range(total_blocks - 1, -1, -1))
+        self._ref: Dict[int, int] = {}                 # bid -> refcount
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
+        self._in_index: set = set()                    # bids the radix owns
+        self._leases: Dict[int, List[int]] = {}        # sid -> ordered bids
+        self._evict_cb: Optional[Callable[[int], None]] = None
+
+    # --- capacity ------------------------------------------------------
+    @property
+    def free(self) -> int:
+        return len(self._free_ids) + len(self._cached)
+
+    @property
+    def physical_in_use(self) -> int:
+        return len(self._ref)
+
+    @property
+    def leased_total(self) -> int:
+        return sum(len(v) for v in self._leases.values())
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size) if n_tokens > 0 else 0
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.free
+
+    def lease_len(self, sid: int) -> int:
+        return len(self._leases.get(sid, ()))
+
+    def lease(self, sid: int) -> List[int]:
+        return list(self._leases.get(sid, ()))
+
+    def is_cached(self, bid: int) -> bool:
+        return bid in self._cached
+
+    # --- index hooks (radix) -------------------------------------------
+    def set_evict_callback(self, cb: Callable[[int], None]) -> None:
+        """Called with a bid when allocation pressure reclaims a cached
+        block — the index must unlink the node mapped to it."""
+        self._evict_cb = cb
+
+    def index_blocks(self, bids: Sequence[int]) -> None:
+        self._in_index.update(bids)
+
+    def unindex_block(self, bid: int) -> None:
+        """Index dropped its mapping: if the block was parked cached, its
+        content is no longer reachable — return it to the free list."""
+        self._in_index.discard(bid)
+        if bid in self._cached:
+            del self._cached[bid]
+            self._free_ids.append(bid)
+
+    # --- allocation ----------------------------------------------------
+    def _take_physical(self) -> int:
+        if self._free_ids:
+            return self._free_ids.pop()
+        bid, _ = self._cached.popitem(last=False)      # evict LRU cached
+        self._in_index.discard(bid)
+        if self._evict_cb is not None:
+            self._evict_cb(bid)
+        return bid
+
+    def alloc(self, sid: int, n: int) -> bool:
+        """Lease ``n`` fresh private blocks (ref = 1) to ``sid``."""
+        if n > self.free:
+            return False
+        lease = self._leases.setdefault(sid, [])
+        for _ in range(n):
+            bid = self._take_physical()
+            self._ref[bid] = 1
+            lease.append(bid)
+        return True
+
+    def acquire(self, sid: int, bids: Sequence[int]) -> None:
+        """Add shared references: incref each block (reviving cached ones)
+        and append to ``sid``'s lease in order."""
+        lease = self._leases.setdefault(sid, [])
+        for bid in bids:
+            if bid in self._cached:
+                del self._cached[bid]
+                self._ref[bid] = 1
+            else:
+                assert bid in self._ref, f"acquire of dead block {bid}"
+                self._ref[bid] += 1
+            lease.append(bid)
+
+    def _drop_ref(self, bid: int) -> None:
+        r = self._ref[bid] - 1
+        if r > 0:
+            self._ref[bid] = r
+            return
+        del self._ref[bid]
+        if bid in self._in_index:
+            self._cached[bid] = None                   # park MRU, evictable
+        else:
+            self._free_ids.append(bid)
+
+    def release_all(self, sid: int) -> int:
+        """Drop every reference ``sid`` holds; returns the lease length."""
+        lease = self._leases.pop(sid, [])
+        for bid in lease:
+            self._drop_ref(bid)
+        return len(lease)
+
+    # --- copy-on-write -------------------------------------------------
+    def tail_needs_cow(self, sid: int) -> bool:
+        lease = self._leases.get(sid)
+        if not lease:
+            return False
+        bid = lease[-1]
+        return self._ref.get(bid, 0) > 1 or bid in self._in_index
+
+    def copy_on_write(self, sid: int) -> bool:
+        """Replace ``sid``'s tail block with a private copy (needs one free
+        physical block). The shared/indexed original keeps its content for
+        the other referents / future prefix matchers."""
+        lease = self._leases.get(sid)
+        if not lease or not self.tail_needs_cow(sid):
+            return True
+        if self.free < 1:
+            return False
+        old = lease[-1]
+        new = self._take_physical()
+        self._ref[new] = 1
+        lease[-1] = new
+        self._drop_ref(old)
+        self.cow_count += 1
+        return True
+
+    # --- pinning (counts, as before) -----------------------------------
+    def pin(self, n: int) -> None:
+        self.pinned += n
+
+    def unpin(self, n: int) -> None:
+        self.pinned -= n
+        assert self.pinned >= 0
+
+    # --- probe / invariants --------------------------------------------
+    def probe(self) -> TieredPoolProbe:
+        return TieredPoolProbe(
+            self.total, self.free, self.pinned, cached=len(self._cached),
+            leased=self.leased_total, physical=len(self._ref),
+            cow_count=self.cow_count)
+
+    def check_consistency(self) -> None:
+        """Refcount accounting: every reference is a lease entry, every
+        physical block is in exactly one of {free, cached, referenced}."""
+        refs: Dict[int, int] = {}
+        for lease in self._leases.values():
+            for bid in lease:
+                refs[bid] = refs.get(bid, 0) + 1
+        assert refs == self._ref, \
+            f"refcount drift: leases={refs} pool={self._ref}"
+        free_set = set(self._free_ids)
+        cached_set = set(self._cached)
+        ref_set = set(self._ref)
+        assert len(free_set) == len(self._free_ids), "duplicate free id"
+        assert not (free_set & cached_set), "block both free and cached"
+        assert not (free_set & ref_set), "block both free and referenced"
+        assert not (cached_set & ref_set), "block both cached and referenced"
+        assert len(free_set) + len(cached_set) + len(ref_set) == self.total, \
+            "physical block lost"
+        assert cached_set <= self._in_index, "cached block not index-owned"

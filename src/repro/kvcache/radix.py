@@ -1,0 +1,111 @@
+"""Prefix index over hashed token chunks (sglang-style radix tree, chunk
+granularity = one KV block).
+
+Sessions carry ``meta["prefix_hashes"]``: an ordered list of ``(key,
+n_tokens)`` chunks covering their round-0 context, where ``key`` is any
+hashable digest of the chunk's tokens (the workload generator uses stable
+tuples; a live tokenizer front-end would use a rolling content hash). Two
+sessions whose round-0 streams share a prefix produce identical leading
+keys, so the second session's cold prefill *matches* the first's inserted
+blocks and attaches to them instead of recomputing.
+
+Lifecycle is owned jointly with the pool: inserted blocks are marked
+index-owned; when their last session reference drops they park on the
+pool's evictable LRU (content retained, capacity still "free"); allocation
+pressure evicts them LRU-first, and the pool calls back here so the mapped
+node — and any now-unreachable descendants — unlink.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Sequence, Tuple
+
+
+class RadixNode:
+    __slots__ = ("key", "bid", "n_tokens", "children", "parent")
+
+    def __init__(self, key: Hashable, bid: int, n_tokens: int, parent):
+        self.key = key
+        self.bid = bid
+        self.n_tokens = n_tokens
+        self.children: Dict[Hashable, "RadixNode"] = {}
+        self.parent = parent
+
+
+class RadixIndex:
+    def __init__(self, pool, chunk_tokens: int):
+        assert chunk_tokens == pool.block_size, \
+            "chunk granularity must equal the block size (one node per block)"
+        self.pool = pool
+        self.chunk_tokens = chunk_tokens
+        self._root = RadixNode(None, -1, 0, None)
+        self._by_bid: Dict[int, RadixNode] = {}
+        pool.set_evict_callback(self._on_evict)
+        # stats (exported into the unified info stream via telemetry)
+        self.queries = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.inserted_blocks = 0
+
+    def __len__(self) -> int:
+        return len(self._by_bid)
+
+    # --- match ---------------------------------------------------------
+    def match(self, hashes: Sequence[Tuple[Hashable, int]]
+              ) -> List[Tuple[int, int]]:
+        """Longest indexed prefix of ``hashes``: list of (bid, n_tokens).
+        A node only matches if its chunk is fully covered (same key implies
+        same token count, but guard against malformed inputs)."""
+        self.queries += 1
+        out: List[Tuple[int, int]] = []
+        node = self._root
+        for key, n_tok in hashes:
+            child = node.children.get(key)
+            if child is None or child.n_tokens != n_tok:
+                break
+            out.append((child.bid, child.n_tokens))
+            node = child
+        if out:
+            self.hits += 1
+            self.hit_tokens += sum(n for _, n in out)
+        return out
+
+    # --- insert --------------------------------------------------------
+    def insert(self, hashes: Sequence[Tuple[Hashable, int]],
+               bids: Sequence[int]) -> int:
+        """Register ``bids[i]`` as the physical block holding chunk ``i``.
+        Existing nodes keep their original block (first insert wins); newly
+        created nodes take ownership of the caller's blocks. Returns the
+        number of new nodes."""
+        assert len(bids) >= len(hashes), "lease shorter than chunk cover"
+        node = self._root
+        created = 0
+        for (key, n_tok), bid in zip(hashes, bids):
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(key, bid, n_tok, node)
+                node.children[key] = child
+                self._by_bid[bid] = child
+                self.pool.index_blocks([bid])
+                created += 1
+            node = child
+        self.inserted_blocks += created
+        return created
+
+    # --- eviction ------------------------------------------------------
+    def _on_evict(self, bid: int) -> None:
+        """Pool reclaimed a cached block: unlink its node. Descendants are
+        unreachable for future matches, so un-index their blocks too (the
+        pool moves any cached ones back to the raw free list)."""
+        node = self._by_bid.pop(bid, None)
+        if node is None:
+            return
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+        stack = list(node.children.values())
+        node.children.clear()
+        while stack:
+            n = stack.pop()
+            self._by_bid.pop(n.bid, None)
+            self.pool.unindex_block(n.bid)
+            stack.extend(n.children.values())
+            n.children.clear()

@@ -357,7 +357,6 @@ def moe_ffn_ep_local(cfg: ModelConfig, p: Params, x, *, ep_axis: str,
     only its own experts; tp_axis (if set) shards F with a psum on the way out.
     """
     m = cfg.moe
-    n_ep = lax.axis_size(ep_axis)
     B, S, D = x.shape
     xt = x.reshape(B * S, D)
     logits = jnp.einsum("td,de->te", xt, p["router"], preferred_element_type=F32)

@@ -28,6 +28,18 @@ from repro.models.layers import (ParallelCtx, apply_norm, attention, attn_out,
 F32 = jnp.float32
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` landed (with ``check_vma``) in newer JAX; older
+    releases only ship ``jax.experimental.shard_map.shard_map`` (with the
+    equivalent ``check_rep`` flag)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class KVCache:
@@ -107,10 +119,10 @@ def _moe_block(cfg: ModelConfig, lp, h, pctx: Optional[ParallelCtx]):
         ep, tp = pctx.ep_axis, pctx.tp_axis
         wspec = {"router": P(), "w_gate": P(ep, None, tp), "w_up": P(ep, None, tp),
                  "w_down": P(ep, tp, None)}
-        fn = jax.shard_map(
+        fn = _shard_map(
             partial(moe_ffn_ep_local, cfg, ep_axis=ep, tp_axis=tp),
             mesh=pctx.mesh, in_specs=(wspec, P(dp, None, None)),
-            out_specs=P(dp, None, None), check_vma=False)
+            out_specs=P(dp, None, None))
         return fn(lp["moe"], h)
     import os
     token_shard = "moe_replicated" in os.environ.get("REPRO_OPT", "")

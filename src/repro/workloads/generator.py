@@ -9,6 +9,16 @@ broad range (the controlled progression is context size, not task length).
 Each session: a large first-round context (repository/task state) followed by
 rounds of tool-output appends + decodes + tool executions drawn from four
 tool kinds with distinct duration distributions.
+
+**Session families** (``n_families > 0``): sessions are grouped into
+families sharing a repository context — the dominant real-world structure of
+ILR workloads (many agents on one repo). Each member's round-0 context is
+``family shared prefix + member-unique tail``; a ``dup_frac`` slice of
+members duplicates the family's canonical round-0 context outright (task
+retries). Sessions carry ``meta["prefix_hashes"]`` — (chunk key, n_tokens)
+pairs at KV-block granularity — which the engine's radix index matches so
+family members attach to already-built physical KV blocks instead of
+recomputing the shared prefix.
 """
 from __future__ import annotations
 
@@ -56,6 +66,11 @@ class WorkloadSpec:
     max_context: Optional[int] = None  # hard cap (model context limit)
     first_round_frac: float = 0.55     # share of prompt volume in round 1
     tool_time_scale: float = 1.0
+    # shared-prefix session families (0 = legacy independent sessions)
+    n_families: int = 0
+    shared_frac: float = 0.7           # family-shared share of round-0 ctx
+    dup_frac: float = 0.1              # P(member duplicates canonical round 0)
+    chunk_tokens: int = 32             # prefix-hash granularity (= block size)
 
 
 def _lognormal(rng, mean: float, sigma: float) -> float:
@@ -63,11 +78,33 @@ def _lognormal(rng, mean: float, sigma: float) -> float:
     return float(rng.lognormal(mu, sigma))
 
 
+def _chunk_keys(fid: int, useed, shared_len: int, total_len: int,
+                chunk: int) -> List:
+    """(key, n_tokens) per consecutive token chunk of a round-0 stream.
+    Chunks fully inside the family-shared region key on the family; any
+    chunk touching member-unique tokens keys on ``useed`` — identical
+    streams therefore produce identical key sequences, and the boundary
+    chunk never false-matches across members."""
+    out = []
+    pos, i = 0, 0
+    while pos < total_len:
+        n = min(chunk, total_len - pos)
+        key = ("fam", fid, i) if pos + n <= shared_len else ("u", useed, i)
+        out.append((key, n))
+        pos += n
+        i += 1
+    return out
+
+
 def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
              tp: int = 1) -> List[Session]:
     rng = np.random.default_rng(spec.seed)
     mean_prompt = ILR_MEAN_PROMPT[spec.regime]
     sessions: List[Session] = []
+    # family-level canonical draws: shared repository-context size and the
+    # canonical round-0 length (first member + duplicates use it verbatim)
+    fam_shared: Dict[int, int] = {}
+    fam_canon_first: Dict[int, int] = {}
     t = 0.0
     for i in range(spec.n_sessions):
         t += rng.exponential(1.0 / spec.arrival_rate)
@@ -77,7 +114,22 @@ def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
         total_prompt = max(2_000.0, total_prompt)
         n_rounds = int(rng.integers(spec.rounds_lo, spec.rounds_hi + 1))
         first = spec.first_round_frac * total_prompt
-        rest = total_prompt - first
+        fid = useed = None
+        if spec.n_families > 0:
+            fid = i % spec.n_families
+            if fid not in fam_shared:           # first member: canonical
+                fam_shared[fid] = max(spec.chunk_tokens,
+                                      int(spec.shared_frac * first))
+                fam_canon_first[fid] = max(1, int(first))
+                first = fam_canon_first[fid]
+                useed = ("c", fid)
+            elif rng.random() < spec.dup_frac:  # task retry: exact duplicate
+                first = fam_canon_first[fid]
+                useed = ("c", fid)
+            else:                               # shared prefix + unique tail
+                first = max(fam_shared[fid] + spec.chunk_tokens, int(first))
+                useed = i
+        rest = max(0.0, total_prompt - first)
         if n_rounds > 1:
             w = rng.dirichlet(np.ones(n_rounds - 1) * 2.0)
             appends = [first] + list(rest * w)
@@ -102,8 +154,14 @@ def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
         ideal = pm.ideal_session_time(
             cfg, hw, [(r.new_input_tokens, r.decode_tokens, r.tool_seconds)
                       for r in rounds], tp)
-        sessions.append(make_session(t, rounds, slo_alpha=spec.slo_alpha,
-                                     ideal_time=ideal))
+        s = make_session(t, rounds, slo_alpha=spec.slo_alpha,
+                         ideal_time=ideal)
+        if fid is not None:
+            s.meta["family"] = fid
+            s.meta["prefix_hashes"] = _chunk_keys(
+                fid, useed, fam_shared[fid], rounds[0].new_input_tokens,
+                spec.chunk_tokens)
+        sessions.append(s)
     return sessions
 
 

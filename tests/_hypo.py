@@ -1,0 +1,81 @@
+"""Minimal fallback for ``hypothesis`` in hermetic environments.
+
+Provides just enough of the ``given``/``settings``/``strategies`` surface for
+this repo's property tests: each ``@given`` draws a fixed number of seeded
+pseudo-random examples instead of doing real shrinking/coverage search. When
+the real hypothesis is installed the test modules import it instead.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 50
+_MAX_EXAMPLES_CAP = 200        # keep tier-1 runtime bounded
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq) -> SearchStrategy:
+        items = list(seq)
+        return SearchStrategy(lambda rng: rng.choice(items))
+
+    @staticmethod
+    def lists(elem: SearchStrategy, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*elems: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(e.example(rng) for e in elems))
+
+
+st = _Strategies()
+
+
+def given(*strategies: SearchStrategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the strategy parameters (it would resolve them as fixtures).
+        def wrapper():
+            rng = random.Random(0)
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_EXAMPLES_CAP)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

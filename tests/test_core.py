@@ -3,8 +3,12 @@ queue packing (Alg. 1), MLFQ, co-scheduler."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # hermetic env: seeded-example fallback
+    from _hypo import given, settings, st
 
 from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
 from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler

@@ -299,6 +299,46 @@ def test_router_straggler_drain_and_affinity():
     assert rid2 == rid
 
 
+@pytest.mark.parametrize("path", ["drain", "failure"])
+def test_router_resets_kv_accounting_on_leave_and_failure(path):
+    """Sessions handed back by a dying/draining replica must not carry
+    phantom block accounting into their next placement — the new engine's
+    refcount invariants would trip on the stale kv_blocks."""
+    from repro.core.session import KVState, Round, make_session
+    r = ClusterRouter(RouterConfig(heartbeat_timeout=5.0))
+    e1 = _mini_engine()
+    r.register("a", e1, now=0.0)
+    r.heartbeat("a", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, now=0.0)
+    s = make_session(0.0, [Round(200_000, 16, None, 0.0)], ideal_time=1.0)
+    assert r.place(s, now=0.0) == "a"
+    # run a few ticks so the session holds blocks mid-prefill
+    now = 0.0
+    for _ in range(3):
+        el, _ = e1.tick(now)
+        now += max(el, 0.05)
+    assert s.kv_blocks > 0 and s.resident_len > 0
+    if path == "drain":
+        moved = r.leave("a", now=1.0)
+        assert s in moved
+    else:
+        failed = r.check_failures(now=100.0)
+        assert failed == ["a"]
+        assert s in r.requeued
+        moved = r.requeued
+    for m in moved:
+        assert m.kv_blocks == 0 and m.resident_len == 0
+        assert m.kv_state == KVState.NONE
+    # re-placement on a fresh replica keeps the new invariants intact
+    e2 = _mini_engine()
+    r.register("b", e2, now=101.0)
+    r.heartbeat("b", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, now=101.0)
+    assert r.place(s, now=101.0) == "b"
+    e2.tick(0.0)
+    e2.check_invariants()
+
+
 def test_router_elastic_join_leave():
     r = ClusterRouter()
     e1 = _mini_engine()

@@ -57,6 +57,8 @@ def test_invariants_every_tick():
             now += elapsed
         elif not prog:
             nxt = eng.tools.next_event_time()
+            if nxt is None:
+                nxt = eng.next_timer_event(now)   # pin TTLs / host DMA
             if nxt is None and i < len(arrivals):
                 nxt = arrivals[i].arrival_time
             if nxt is None and eng.waiting:

@@ -3,8 +3,12 @@ workloads under every policy must terminate with invariants intact, exact
 event bookkeeping, and no lost sessions. Plus the ServingAPI layer."""
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # hermetic env: seeded-example fallback
+    from _hypo import given, settings, st
 
 from repro.configs.qwen3_coder_30b import CONFIG as QWEN3
 from repro.core import events as ev

@@ -1,0 +1,360 @@
+"""Tiered KV-state subsystem tests: pool refcount/CoW invariants, radix
+insert/match/evict, host-tier offload round trips, prefix sharing end to
+end, and a randomized three-way retention schedule holding the engine's
+extended (refcount-aware) invariants."""
+import random
+
+import pytest
+
+from repro.configs.qwen3_coder_30b import CONFIG as QWEN3, CONTEXT_LIMIT
+from repro.core import events as ev
+from repro.core.policies import KVAction
+from repro.core.session import Round, make_session
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig, run_sim
+from repro.kvcache import BlockPool, HostTier, HostTierConfig, RadixIndex
+from repro.models.perf_model import H100
+from repro.workloads.generator import WorkloadSpec, generate
+
+BACKEND = SimBackend(QWEN3, H100)
+
+
+def _engine(policy="mars", blocks=9000, **cfg_kw):
+    return Engine(EngineConfig(total_kv_blocks=blocks, block_size=32,
+                               token_budget=8192, max_decode_batch=64,
+                               decode_granularity=8, cpu_slots=8, **cfg_kw),
+                  policy, BACKEND)
+
+
+# ---------------------------------------------------------------------------
+# pool: refcounts + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_pool_basic_alloc_release():
+    p = BlockPool(16, 32)
+    assert p.alloc(1, 4) and p.free == 12
+    assert not p.alloc(2, 13)            # over capacity refused
+    assert p.release_all(1) == 4
+    assert p.free == 16 and p.physical_in_use == 0
+    p.check_consistency()
+
+
+def test_pool_shared_blocks_freed_only_at_refcount_zero():
+    p = BlockPool(16, 32)
+    p.alloc(1, 3)
+    shared = p.lease(1)
+    p.acquire(2, shared)                 # second session references them
+    assert p.free == 13                  # no new physical blocks
+    assert p.leased_total == 6 and p.physical_in_use == 3
+    p.release_all(1)
+    assert p.physical_in_use == 3        # still referenced by sid 2
+    assert p.free == 13
+    p.release_all(2)
+    assert p.physical_in_use == 0 and p.free == 16
+    p.check_consistency()
+
+
+def test_pool_no_double_free():
+    p = BlockPool(8, 32)
+    p.alloc(7, 2)
+    assert p.release_all(7) == 2
+    assert p.release_all(7) == 0         # second release is a no-op
+    p.check_consistency()
+
+
+def test_pool_copy_on_write_preserves_shared_tail():
+    p = BlockPool(16, 32)
+    p.alloc(1, 2)
+    tail = p.lease(1)[-1]
+    p.acquire(2, [tail])                 # shared tail (ref 2)
+    assert p.tail_needs_cow(2)
+    assert p.copy_on_write(2)
+    assert p.lease(2)[-1] != tail        # private copy
+    assert p.lease(1)[-1] == tail        # original untouched
+    assert p.cow_count == 1
+    assert not p.tail_needs_cow(2)
+    p.check_consistency()
+
+
+def test_pool_indexed_block_parks_cached_then_revives():
+    p = BlockPool(8, 32)
+    p.alloc(1, 3)
+    bids = p.lease(1)
+    p.index_blocks(bids)
+    p.release_all(1)
+    assert p.free == 8                   # cached counts as allocatable
+    assert p.probe().cached == 3         # ...but content is retained
+    p.acquire(2, bids)                   # revive from cache
+    assert p.probe().cached == 0 and p.free == 5
+    p.release_all(2)
+    p.check_consistency()
+
+
+def test_pool_cached_evicted_under_pressure_with_callback():
+    p = BlockPool(4, 32)
+    evicted = []
+    p.set_evict_callback(evicted.append)
+    p.alloc(1, 4)
+    p.index_blocks(p.lease(1))
+    p.release_all(1)
+    assert p.probe().cached == 4
+    assert p.alloc(2, 4)                 # forces eviction of cached blocks
+    assert len(evicted) == 4
+    p.check_consistency()
+
+
+def test_pool_random_ops_never_leak():
+    rng = random.Random(0)
+    p = BlockPool(64, 32)
+    sids = list(range(6))
+    for _ in range(3000):
+        sid = rng.choice(sids)
+        op = rng.random()
+        if op < 0.4:
+            p.alloc(sid, rng.randint(1, 8))
+        elif op < 0.6:
+            donor = rng.choice(sids)
+            lease = p.lease(donor)
+            if lease:
+                k = rng.randint(1, len(lease))
+                p.acquire(sid, lease[:k])
+        elif op < 0.8:
+            p.release_all(sid)
+        elif p.lease(sid) and p.free >= 1:
+            p.copy_on_write(sid)
+        p.check_consistency()
+
+
+# ---------------------------------------------------------------------------
+# radix: insert / match / evict
+# ---------------------------------------------------------------------------
+
+def _hashes(seed, n, tail_tokens=32):
+    out = [((seed, i), 32) for i in range(n - 1)]
+    out.append(((seed, n - 1), tail_tokens))
+    return out
+
+
+def test_radix_insert_match_longest_prefix():
+    p = BlockPool(32, 32)
+    r = RadixIndex(p, 32)
+    p.alloc(1, 4)
+    shared = _hashes("fam", 2) + _hashes("u1", 2)
+    r.insert(shared, p.lease(1))
+    # a second stream sharing only the first two chunks
+    other = _hashes("fam", 2) + _hashes("u2", 2)
+    m = r.match(other)
+    assert [bid for bid, _ in m] == p.lease(1)[:2]
+    assert sum(n for _, n in m) == 64
+    # identical stream matches fully, including a partial tail
+    assert len(r.match(shared)) == 4
+
+
+def test_radix_partial_tail_chunk_must_match_length():
+    p = BlockPool(8, 32)
+    r = RadixIndex(p, 32)
+    p.alloc(1, 2)
+    r.insert(_hashes("x", 2, tail_tokens=20), p.lease(1))
+    assert len(r.match(_hashes("x", 2, tail_tokens=20))) == 2
+    # same keys, different coverage => tail rejected
+    assert len(r.match(_hashes("x", 2, tail_tokens=32))) == 1
+
+
+def test_radix_eviction_unlinks_subtree():
+    p = BlockPool(4, 32)
+    r = RadixIndex(p, 32)
+    p.alloc(1, 4)
+    r.insert(_hashes("a", 4), p.lease(1))
+    p.release_all(1)                     # all four park cached
+    assert len(r) == 4
+    p.alloc(2, 2)                        # evicts LRU cached (root-most first)
+    # evicting an interior node drops its unreachable descendants too
+    assert len(r) < 4
+    assert r.match(_hashes("a", 4)) == []
+    p.check_consistency()
+
+
+# ---------------------------------------------------------------------------
+# host tier
+# ---------------------------------------------------------------------------
+
+def test_host_tier_occupancy_and_cost_model():
+    ht = HostTier(HostTierConfig(capacity_blocks=10, pcie_bw=1e9),
+                  bytes_per_token=1e6, block_size=32)
+    assert ht.can_store(10) and not ht.can_store(11)
+    sec = ht.store(1, tokens=100, blocks=4, now=0.0)
+    assert sec == pytest.approx(ht.cfg.base_latency_s + 0.1)
+    assert ht.used_blocks == 4
+    assert not ht.ready(1, now=sec * 0.5)
+    assert ht.ready(1, now=sec + 1e-9)
+    assert ht.load(1, now=1.0) == 100
+    assert ht.used_blocks == 0 and ht.hit_rate == 1.0
+
+
+def test_offload_round_trip_restores_resident_len():
+    """Force OFFLOAD at every tool yield: the session must restore its exact
+    resident_len from the host tier and finish (SWAP_OUT/SWAP_IN tier=host
+    events paired)."""
+    eng = _engine(policy="fcfs")
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    s = make_session(0.0, [Round(50_000, 32, "terminal", 30.0),
+                           Round(2_000, 32, None, 0.0)], ideal_time=10.0)
+    finished, _ = run_sim(eng, [s], max_time=1e5)
+    assert len(finished) == 1
+    outs = [e for e in eng.bus.log if e.kind == ev.SWAP_OUT
+            and e.data.get("tier") == "host"]
+    ins = [e for e in eng.bus.log if e.kind == ev.SWAP_IN
+           and e.data.get("tier") == "host"]
+    assert len(outs) == 1 and len(ins) == 1
+    assert ins[0].data["tokens"] == 50_032      # prefill + round-0 decode
+    assert eng.host.hits == 1 and eng.host.used_blocks == 0
+    eng.check_invariants()
+
+
+def test_offload_defers_to_free_when_host_tier_full():
+    eng = _engine(policy="fcfs", host_tier_blocks=4)   # 128-token tier
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    s = make_session(0.0, [Round(20_000, 16, "terminal", 5.0),
+                           Round(500, 16, None, 0.0)], ideal_time=10.0)
+    finished, _ = run_sim(eng, [s], max_time=1e5)
+    assert len(finished) == 1
+    assert eng.host.stores == 0                 # fell back to drop+recompute
+    assert any(e.kind == ev.EVICT and e.data.get("reason") == "tool_free"
+               for e in eng.bus.log)
+    eng.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing, end to end
+# ---------------------------------------------------------------------------
+
+def _family_sessions(shared_tokens=48_000, tail=5_000, gap=200.0):
+    """Two sessions sharing a repository-context prefix; the second arrives
+    after the first finished building it."""
+    fam = [((("fam", i), 32)) for i in range(shared_tokens // 32)]
+    mk = lambda arr, seed: make_session(
+        arr, [Round(shared_tokens + tail, 64, None, 0.0)], ideal_time=10.0)
+    a, b = mk(0.0, 1), mk(gap, 2)
+    a.meta["prefix_hashes"] = fam + [((("ua", i), 32))
+                                     for i in range(-(-tail // 32))]
+    b.meta["prefix_hashes"] = fam + [((("ub", i), 32))
+                                     for i in range(-(-tail // 32))]
+    return a, b
+
+
+def test_prefix_sharing_skips_shared_prefill():
+    eng = _engine(blocks=12_000)
+    a, b = _family_sessions()
+    finished, _ = run_sim(eng, [a, b], max_time=1e5)
+    assert len(finished) == 2
+    assert eng.prefix_hit_tokens >= 48_000
+    # the second session computed only its unique tail
+    total = sum(s.total_prompt_tokens for s in (a, b))
+    assert eng.prefill_tokens_computed <= total - 48_000
+    hits = [e for e in eng.bus.log if e.kind == ev.PREFIX_HIT]
+    assert hits and hits[0].sid == b.sid
+    eng.check_invariants()
+
+
+def test_prefix_sharing_off_recomputes_everything():
+    eng = _engine(blocks=12_000, enable_prefix_sharing=False)
+    a, b = _family_sessions()
+    finished, _ = run_sim(eng, [a, b], max_time=1e5)
+    assert len(finished) == 2
+    assert eng.prefix_hit_tokens == 0
+    assert eng.prefill_tokens_computed >= sum(
+        s.total_prompt_tokens for s in (a, b))
+    eng.check_invariants()
+
+
+def test_duplicate_round0_full_match_triggers_cow():
+    """An exact duplicate attaches its entire round-0 context (partial tail
+    block included) and must CoW before decoding into it."""
+    eng = _engine(blocks=12_000)
+    toks = 20_016                       # not block-aligned: partial tail
+    h = [(("f", i), 32) for i in range(toks // 32)] + [(("f", "t"), 16)]
+    mk = lambda arr: make_session(
+        arr, [Round(toks, 32, None, 0.0)], ideal_time=5.0)
+    a, b = mk(0.0), mk(100.0)
+    a.meta["prefix_hashes"] = list(h)
+    b.meta["prefix_hashes"] = list(h)
+    finished, _ = run_sim(eng, [a, b], max_time=1e5)
+    assert len(finished) == 2
+    assert eng.prefix_hit_tokens == toks       # full-duplicate match
+    assert eng.blocks.cow_count >= 1
+    eng.check_invariants()
+
+
+def test_generator_families_share_chunk_keys():
+    spec = WorkloadSpec(regime="ILR-1", arrival_rate=0.5, n_sessions=12,
+                        seed=4, max_context=CONTEXT_LIMIT, n_families=3,
+                        shared_frac=0.7, dup_frac=0.0)
+    sessions = generate(spec, QWEN3, H100)
+    fams = {}
+    for s in sessions:
+        assert "prefix_hashes" in s.meta
+        hashes = s.meta["prefix_hashes"]
+        assert sum(n for _, n in hashes) == s.rounds[0].new_input_tokens
+        fams.setdefault(s.meta["family"], []).append(hashes)
+    for members in fams.values():
+        assert len(members) == 4
+        first_keys = [k for k, _ in members[0]]
+        for other in members[1:]:
+            keys = [k for k, _ in other]
+            shared = sum(1 for a, b in zip(first_keys, keys) if a == b)
+            assert shared >= 1           # family prefix in common
+            assert keys != first_keys    # unique tails differ (dup_frac=0)
+
+
+# ---------------------------------------------------------------------------
+# randomized three-way retention schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_pin_offload_drop_schedule_holds_invariants(seed):
+    rng = random.Random(seed)
+
+    def random_yield(s, now):
+        r = rng.random()
+        if r < 0.3:
+            return KVAction.PIN, rng.choice([5.0, float("inf")])
+        if r < 0.6:
+            return KVAction.OFFLOAD, 0.0
+        if r < 0.7:
+            return KVAction.SWAP, 0.0
+        return KVAction.FREE, 0.0
+
+    eng = _engine(policy="continuum", blocks=6000)
+    eng.policy.on_tool_yield = random_yield
+    spec = WorkloadSpec(regime="ILR-1", arrival_rate=1.0, n_sessions=8,
+                        seed=seed, max_context=CONTEXT_LIMIT, n_families=2)
+    sessions = generate(spec, QWEN3, H100)
+    arrivals = sorted(sessions, key=lambda s: s.arrival_time)
+    i, now = 0, 0.0
+    for _ in range(60_000):
+        while i < len(arrivals) and arrivals[i].arrival_time <= now:
+            eng.submit(arrivals[i])
+            i += 1
+        elapsed, prog = eng.tick(now)
+        eng.check_invariants()
+        if elapsed:
+            now += elapsed
+        elif not prog:
+            nxt = eng.tools.next_event_time()
+            t2 = eng.next_timer_event(now)
+            cands = [t for t in (nxt, t2) if t is not None]
+            if i < len(arrivals):
+                cands.append(arrivals[i].arrival_time)
+            if eng.waiting:
+                cands.append(now + 0.5)
+            if not cands:
+                break
+            now = max(now + 1e-9, min(cands))
+        if eng.done() and i >= len(arrivals):
+            break
+    assert eng.done()
+    assert len(eng.finished) + len(eng.rejected) == len(sessions)
+    assert eng.blocks.free == eng.blocks.total
+    assert eng.blocks.pinned == 0
+    if eng.host is not None:
+        assert eng.host.used_blocks == 0
