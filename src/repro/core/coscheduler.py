@@ -159,7 +159,3 @@ class OpportunisticCoScheduler:
     def reclaim_order(self, pinned: Sequence[Session], now: float) -> List[Session]:
         """Pinned sessions in reclaim order (lowest retention score first)."""
         return sorted(pinned, key=lambda s: self.retention_score(s, now))
-
-    def revoke_pins(self, pinned: Sequence[Session], now: float) -> List[Session]:
-        """Re-evaluation pass run every tick: pins whose score went negative."""
-        return [s for s in pinned if self.retention_score(s, now) <= 0.0]

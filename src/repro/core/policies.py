@@ -198,8 +198,11 @@ class MARSPolicy(Policy):
             host_tier.swap_seconds if host_tier is not None else None
 
     def _host_can_take(self, s: Session) -> bool:
+        # size with the tier's own block size (= engine block size), not
+        # cosched.block_size — they are configured independently and a
+        # drifted precheck would disagree with _offload_kv's can_store
         return (self.host_tier is not None and self.host_tier.can_store(
-            -(-s.resident_len // self.cfg.cosched.block_size)))
+            -(-s.resident_len // self.host_tier.block_size)))
 
     # external control plane
     def admit(self, queue, now):
@@ -235,11 +238,6 @@ class MARSPolicy(Policy):
         if action == KVAction.OFFLOAD and self._host_can_take(s):
             return KVAction.OFFLOAD, 0.0
         return KVAction.FREE, 0.0
-
-    def tick_pinned(self, pinned, now):
-        if self.cfg.disable_coscheduler:
-            return list(pinned)
-        return self.cosched.revoke_pins(pinned, now)
 
     def revoke_actions(self, pinned, now):
         if self.cfg.disable_coscheduler:

@@ -28,15 +28,28 @@ import numpy as np
 from repro.core.session import KVState, Session
 
 
-def _reset_kv_accounting(s: Session) -> None:
+def _reset_kv_accounting(s: Session, engine=None, now: float = 0.0) -> None:
     """A session leaving a replica loses its device-resident state; it will
     resume elsewhere by prefix recompute. Without this reset the next
-    placement inherits phantom block accounting from the old replica."""
+    placement inherits phantom block accounting from the old replica.
+
+    When the old replica's engine is handed in, the session is detached
+    engine-side too (device lease, pin counters, host-tier entry, live
+    backend host copy, membership lists) — a reused or heartbeat-recovered
+    engine would otherwise trip its invariants and leak capacity."""
+    detach = getattr(engine, "detach_session", None)
+    if detach is not None:
+        detach(s, now)
     s.kv_blocks = 0
     s.resident_len = 0
     s.kv_state = KVState.NONE
     s.meta.pop("swapped_len", None)
     s.meta.pop("host_tier", None)
+    # radix bookkeeping is per-replica: the new home's index knows nothing
+    # of the chunks this session indexed (or attached to) on the old one
+    for k in ("prefix_chunks_indexed", "radix_inserted", "radix_hit",
+              "radix_queried", "radix_stale_at"):
+        s.meta.pop(k, None)
 
 
 @dataclass
@@ -78,14 +91,14 @@ class ClusterRouter:
 
     def leave(self, rid: str, now: float = None) -> List[Session]:
         """Graceful drain: returns sessions to re-place elsewhere."""
+        now = time.monotonic() if now is None else now
         r = self.replicas.pop(rid, None)
         out: List[Session] = []
         if r is not None and r.engine is not None:
             out = list(r.engine.waiting) + list(r.engine.active)
             for s in out:
-                _reset_kv_accounting(s)
-        self.events.append({"t": now or time.monotonic(), "ev": "leave",
-                            "rid": rid})
+                _reset_kv_accounting(s, r.engine, now)
+        self.events.append({"t": now, "ev": "leave", "rid": rid})
         return out
 
     # --- telemetry -----------------------------------------------------------
@@ -119,7 +132,7 @@ class ClusterRouter:
                 if r.engine is not None:
                     victims = list(r.engine.waiting) + list(r.engine.active)
                     for s in victims:
-                        _reset_kv_accounting(s)
+                        _reset_kv_accounting(s, r.engine, now)
                         self.requeued.append(s)
         return failed
 

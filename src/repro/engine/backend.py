@@ -39,6 +39,10 @@ class BatchWork:
 
 class SimBackend:
     name = "sim"
+    # block accounting IS the KV state in the sim, so attaching to shared
+    # radix blocks needs no data movement; a live backend must copy the
+    # prefix KV into the attaching session's cache to claim this
+    supports_prefix_sharing = True
 
     def __init__(self, cfg: ModelConfig, hw: pm.HardwareSpec, tp: int = 1):
         self.cfg = cfg

@@ -65,9 +65,15 @@ class Engine:
         self.bus = bus or EventBus()
         self.backend = backend
         self.blocks = BlockPool(cfg.total_kv_blocks, cfg.block_size)
+        # prefix sharing is capacity-plane only: the engine swaps block
+        # references, never KV bytes, so it requires a backend whose KV
+        # state lives in the block accounting (sim) or one that copies the
+        # shared prefix on attach — the slot-dense live runner does neither
         self.radix: Optional[RadixIndex] = (
             RadixIndex(self.blocks, chunk_tokens=cfg.block_size)
-            if cfg.enable_prefix_sharing else None)
+            if (cfg.enable_prefix_sharing
+                and getattr(backend, "supports_prefix_sharing", False))
+            else None)
         host_blocks = (4 * cfg.total_kv_blocks if cfg.host_tier_blocks < 0
                        else cfg.host_tier_blocks)
         bpt_fn = getattr(backend, "kv_bytes_per_token", None)
@@ -182,6 +188,8 @@ class Engine:
         progressed = False
         # 1. tool completions
         for s in self.tools.poll(now):
+            if s not in self.active:
+                continue             # detached mid-tool: owned elsewhere now
             self._resume_from_tool(s, now)
             progressed = True
         # 2. telemetry probe
@@ -256,11 +264,20 @@ class Engine:
         hashes = s.meta.get("prefix_hashes")
         if not hashes:
             return False
+        # skip the O(context/block) root re-match unless the index grew
+        # since the last fully-consumed lookup (inserted_blocks is monotone;
+        # capacity-trimmed matches don't stamp, so they retry as space frees)
+        if s.meta.get("radix_stale_at") == self.radix.inserted_blocks:
+            return False
         held = s.kv_blocks
         if held * self.cfg.block_size != s.resident_len:
             return False          # partial tail block: not chunk-aligned
+        if not s.meta.get("radix_queried"):
+            s.meta["radix_queried"] = True
+            self.radix.record_query()
         matched = self.radix.match(hashes)
         if len(matched) <= held:
+            s.meta["radix_stale_at"] = self.radix.inserted_blocks
             return False
         matched = matched[held:]  # the already-built prefix stays private
         avail = max(0, self.blocks.free - self._watermark())
@@ -279,6 +296,8 @@ class Engine:
         s.context_len = max(s.context_len, s.resident_len)
         s.kv_state = KVState.RESIDENT
         self.prefix_hit_tokens += toks
+        self.radix.record_hit(toks, first=not s.meta.get("radix_hit"))
+        s.meta["radix_hit"] = True
         self.bus.emit(ev.PREFIX_HIT, now, s.sid, tokens=toks,
                       blocks=len(bids))
         if s.pending_prefill <= 0:       # full duplicate: nothing to build
@@ -346,12 +365,15 @@ class Engine:
             self._release_kv(s, now, reason=reason)
 
     def _drop_host_copy(self, s: Session) -> None:
-        """Abandon a host-tier entry (recompute fallback / release)."""
+        """Abandon host-side KV (recompute fallback / release): the tier
+        entry if present, and the live backend's copy unconditionally —
+        legacy-SWAP sessions also park K/V host-side via _swap_out and
+        would otherwise leak it for the life of the server."""
         if s.meta.pop("host_tier", None) and self.host is not None:
             self.host.drop(s.sid)
-            drop = getattr(self.backend, "drop_host", None)
-            if drop is not None:
-                drop(s.sid)
+        drop = getattr(self.backend, "drop_host", None)
+        if drop is not None:
+            drop(s.sid)
 
     def _resume_from_tool(self, s: Session, now: float) -> None:
         if s in self.pinned:
@@ -366,6 +388,21 @@ class Engine:
         s.round_submit = now
         self.bus.emit(ev.GPU_SUBMIT, now, s.sid, round=s.cur_round,
                       tokens=s.pending_prefill)
+
+    def detach_session(self, s: Session, now: float) -> None:
+        """Hand a session off this replica (router drain / failover):
+        release its device lease, pin accounting, host-side copies, and any
+        in-flight tool, and forget it. The engine stays reusable —
+        ``check_invariants`` holds after detach, so a recovered replica can
+        keep ticking without resuming a session it no longer owns."""
+        if s.phase == Phase.TOOL:
+            cancel = getattr(self.tools, "cancel", None)
+            if cancel is not None:
+                cancel(s.sid, now)
+        self._release_kv(s, now, reason="detach")
+        for lst in (self.waiting, self.active, self.pinned):
+            if s in lst:
+                lst.remove(s)
 
     def _release_kv(self, s: Session, now: float, reason: str) -> None:
         if s.kv_state == KVState.PINNED:
@@ -384,6 +421,10 @@ class Engine:
         s.kv_blocks = 0
         s.resident_len = 0
         s.kv_state = KVState.NONE
+        # the attach-skip stamp is only valid while the attached state is
+        # intact: a released (preempted/reclaimed) round-0 session must be
+        # free to re-attach even if the index hasn't grown since
+        s.meta.pop("radix_stale_at", None)
         release = getattr(self.backend, "release_session", None)
         if release is not None:
             release(s.sid)
@@ -421,6 +462,29 @@ class Engine:
                 return True
         return self.blocks.free >= n
 
+    def _write_need(self, s: Session, new_tokens: int) -> Tuple[int, int]:
+        """(new blocks, CoW blocks) to extend ``s`` by ``new_tokens``:
+        writing into a shared/indexed partial tail block requires a private
+        copy first (one extra physical block while the original keeps its
+        content for the other referents / future prefix matchers)."""
+        need = self.blocks.blocks_for(s.resident_len + new_tokens) \
+            - s.kv_blocks
+        cow = 1 if (s.resident_len % self.cfg.block_size != 0
+                    and self.blocks.tail_needs_cow(s.sid)) else 0
+        return need, cow
+
+    def _grow_lease(self, s: Session, need: int, cow: int) -> None:
+        """Commit a write reservation (capacity for need + cow must already
+        be ensured). CoW runs while the shared block is still the lease
+        tail — alloc() appends private blocks, after which copy_on_write
+        would re-check the wrong block and silently no-op."""
+        if cow:
+            assert self.blocks.copy_on_write(s.sid), \
+                "copy-on-write failed despite ensured capacity"
+        if need > 0:
+            self.blocks.alloc(s.sid, need)
+            s.kv_blocks += need
+
     # ------------------------------------------------------------------
     def _form_batch(self, now: float) -> BatchWork:
         c = self.cfg
@@ -441,21 +505,12 @@ class Engine:
             g = min(c.decode_granularity, s.cur.decode_tokens - s.decoded, budget)
             if g <= 0:
                 continue
-            need = self.blocks.blocks_for(s.resident_len + g) - s.kv_blocks
-            # writing into a shared/indexed partial tail block requires a
-            # copy-on-write (one extra physical block while the original
-            # keeps its content for the other referents)
-            cow = 1 if (s.resident_len % c.block_size != 0
-                        and self.blocks.tail_needs_cow(s.sid)) else 0
+            need, cow = self._write_need(s, g)
             if need + cow > 0:
                 if not self._ensure_blocks(need + cow, now, in_batch, s,
                                            allow_preempt=True):
                     continue
-                if need > 0:
-                    self.blocks.alloc(s.sid, need)
-                    s.kv_blocks += need
-                if cow:
-                    self.blocks.copy_on_write(s.sid)
+                self._grow_lease(s, need, cow)
             decodes.append((s, g))
             in_batch.add(s.sid)
             budget -= g
@@ -536,16 +591,10 @@ class Engine:
             chunk = self.policy.prefill_chunk(want, avail, c.block_size)
             if chunk <= 0:
                 return False
-        need = self.blocks.blocks_for(s.resident_len + chunk) - s.kv_blocks
-        cow = 1 if (s.resident_len % c.block_size != 0
-                    and self.blocks.tail_needs_cow(s.sid)) else 0
+        need, cow = self._write_need(s, chunk)
         if need + cow > self.blocks.free:
             return False
-        if need > 0:
-            self.blocks.alloc(s.sid, need)
-            s.kv_blocks += need
-        if cow:
-            self.blocks.copy_on_write(s.sid)
+        self._grow_lease(s, need, cow)
         s.kv_state = KVState.RESIDENT
         prefills.append((s, chunk))
         in_batch.add(s.sid)

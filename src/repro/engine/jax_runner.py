@@ -122,9 +122,14 @@ class JaxBackend:
         def xfer():
             host = (jax.device_get(self.cache.k[:, 0]),
                     jax.device_get(self.cache.v[:, 0]))
-            jnp.asarray(host[0]).block_until_ready()
+            dev = (jax.device_put(host[0]), jax.device_put(host[1]))
+            dev[0].block_until_ready()
+            dev[1].block_until_ready()
 
-        self._h2d_bw = max(1e6, slot_bytes / self._time_once(xfer))
+        # full round trip moves slot_bytes each way; swap_time charges one
+        # direction per call, so price it at the two-direction average rather
+        # than extrapolating D2H bandwidth onto H2D transfers
+        self._h2d_bw = max(1e6, 2 * slot_bytes / self._time_once(xfer))
 
     def recompute_time(self, n_tokens: int) -> float:
         return n_tokens * self._prefill_s_per_tok

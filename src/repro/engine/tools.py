@@ -13,7 +13,7 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import events as ev
 from repro.core.events import EventBus
@@ -62,6 +62,19 @@ class SimToolExecutor:
                 self._begin(w, kind, dur, end, seq)
         return done
 
+    def cancel(self, sid: int, now: float) -> None:
+        """Forget a session's queued/running tool (router detach): its
+        completion must not resume a session another replica now owns.
+        A freed CPU slot immediately starts the oldest queued tool."""
+        self._waiting = [w for w in self._waiting if w[2].sid != sid]
+        kept = [e for e in self._running if e[2].sid != sid]
+        if len(kept) != len(self._running):
+            self._running = kept
+            heapq.heapify(self._running)
+            while self._waiting and len(self._running) < self.cpu_slots:
+                _, seq, w, dur, kind = self._waiting.pop(0)
+                self._begin(w, kind, dur, now, seq)
+
     def next_event_time(self) -> Optional[float]:
         return self._running[0][0] if self._running else None
 
@@ -87,6 +100,7 @@ class RealToolExecutor:
         self._pool = ThreadPoolExecutor(max_workers=cpu_slots)
         self._done: "queue.Queue[Session]" = queue.Queue()
         self._active = 0
+        self._cancelled: Dict[int, int] = {}   # sid -> completions to drop
         self._lock = threading.Lock()
         self._t0 = time.monotonic()
 
@@ -121,13 +135,29 @@ class RealToolExecutor:
 
         self._pool.submit(_run)
 
+    def cancel(self, sid: int, now: float) -> None:
+        """Suppress the session's pending tool completion (router detach).
+        The worker thread itself cannot be interrupted, so the next result
+        for this sid is dropped instead of resuming the session."""
+        with self._lock:
+            self._cancelled[sid] = self._cancelled.get(sid, 0) + 1
+
     def poll(self, now: float) -> List[Session]:
         out = []
         while True:
             try:
-                out.append(self._done.get_nowait())
+                s = self._done.get_nowait()
             except queue.Empty:
                 return out
+            with self._lock:
+                pending = self._cancelled.get(s.sid, 0)
+                if pending:
+                    if pending == 1:
+                        del self._cancelled[s.sid]
+                    else:
+                        self._cancelled[s.sid] = pending - 1
+                    continue
+            out.append(s)
 
     def next_event_time(self) -> Optional[float]:
         return None

@@ -42,6 +42,7 @@ class HostTier:
         self.bytes_per_token = max(1.0, float(bytes_per_token))
         self.block_size = block_size
         self._entries: Dict[int, _Entry] = {}
+        self._used = 0          # running sum(e.blocks) — keeps probes O(1)
         # stats
         self.stores = 0
         self.hits = 0           # completed swap-ins (offload paid off)
@@ -62,10 +63,10 @@ class HostTier:
 
     @property
     def used_blocks(self) -> int:
-        return sum(e.blocks for e in self._entries.values())
+        return self._used
 
     def can_store(self, blocks: int) -> bool:
-        return self.used_blocks + blocks <= self.cfg.capacity_blocks
+        return self._used + blocks <= self.cfg.capacity_blocks
 
     def holds(self, sid: int) -> bool:
         return sid in self._entries
@@ -77,6 +78,7 @@ class HostTier:
         assert sid not in self._entries, f"double offload of sid {sid}"
         sec = self.swap_seconds(tokens)
         self._entries[sid] = _Entry(tokens, blocks, now + sec)
+        self._used += blocks
         self.stores += 1
         self.bytes_moved += tokens * self.bytes_per_token
         return sec
@@ -88,13 +90,16 @@ class HostTier:
     def load(self, sid: int, now: float) -> int:
         """Swap-in completed: release host capacity, count the hit."""
         e = self._entries.pop(sid)
+        self._used -= e.blocks
         self.hits += 1
         self.bytes_moved += e.tokens * self.bytes_per_token
         return e.tokens
 
     def drop(self, sid: int) -> None:
         """Abandon an entry (session fell back to recompute or finished)."""
-        if self._entries.pop(sid, None) is not None:
+        e = self._entries.pop(sid, None)
+        if e is not None:
+            self._used -= e.blocks
             self.drops += 1
 
     def next_event_time(self, now: float) -> Optional[float]:

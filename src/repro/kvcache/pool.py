@@ -49,7 +49,8 @@ class BlockPool:
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
         self._in_index: set = set()                    # bids the radix owns
         self._leases: Dict[int, List[int]] = {}        # sid -> ordered bids
-        self._evict_cb: Optional[Callable[[int], None]] = None
+        self._leased = 0                   # running sum(len(lease)) — keeps
+        self._evict_cb: Optional[Callable[[int], None]] = None  # probe O(1)
 
     # --- capacity ------------------------------------------------------
     @property
@@ -62,7 +63,7 @@ class BlockPool:
 
     @property
     def leased_total(self) -> int:
-        return sum(len(v) for v in self._leases.values())
+        return self._leased
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size) if n_tokens > 0 else 0
@@ -115,6 +116,7 @@ class BlockPool:
             bid = self._take_physical()
             self._ref[bid] = 1
             lease.append(bid)
+        self._leased += n
         return True
 
     def acquire(self, sid: int, bids: Sequence[int]) -> None:
@@ -129,6 +131,7 @@ class BlockPool:
                 assert bid in self._ref, f"acquire of dead block {bid}"
                 self._ref[bid] += 1
             lease.append(bid)
+            self._leased += 1
 
     def _drop_ref(self, bid: int) -> None:
         r = self._ref[bid] - 1
@@ -146,6 +149,7 @@ class BlockPool:
         lease = self._leases.pop(sid, [])
         for bid in lease:
             self._drop_ref(bid)
+        self._leased -= len(lease)
         return len(lease)
 
     # --- copy-on-write -------------------------------------------------
@@ -197,6 +201,8 @@ class BlockPool:
                 refs[bid] = refs.get(bid, 0) + 1
         assert refs == self._ref, \
             f"refcount drift: leases={refs} pool={self._ref}"
+        assert self._leased == sum(len(v) for v in self._leases.values()), \
+            "leased counter drift"
         free_set = set(self._free_ids)
         cached_set = set(self._cached)
         ref_set = set(self._ref)

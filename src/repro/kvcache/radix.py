@@ -54,8 +54,11 @@ class RadixIndex:
               ) -> List[Tuple[int, int]]:
         """Longest indexed prefix of ``hashes``: list of (bid, n_tokens).
         A node only matches if its chunk is fully covered (same key implies
-        same token count, but guard against malformed inputs)."""
-        self.queries += 1
+        same token count, but guard against malformed inputs).
+
+        Pure lookup — the engine polls this per tick for every waiting
+        round-0 session, so stats are recorded via record_query /
+        record_hit only when the caller actually attaches."""
         out: List[Tuple[int, int]] = []
         node = self._root
         for key, n_tok in hashes:
@@ -64,10 +67,19 @@ class RadixIndex:
                 break
             out.append((child.bid, child.n_tokens))
             node = child
-        if out:
-            self.hits += 1
-            self.hit_tokens += sum(n for _, n in out)
         return out
+
+    # --- stats (driven by the engine) ----------------------------------
+    def record_query(self) -> None:
+        """One per session that consults the index (not per poll)."""
+        self.queries += 1
+
+    def record_hit(self, tokens: int, *, first: bool) -> None:
+        """Tokens actually attached; ``first`` marks the session's first
+        attach so hits counts sharing sessions, keeping hit_rate ≤ 1."""
+        if first:
+            self.hits += 1
+        self.hit_tokens += tokens
 
     # --- insert --------------------------------------------------------
     def insert(self, hashes: Sequence[Tuple[Hashable, int]],

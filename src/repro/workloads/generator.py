@@ -23,7 +23,7 @@ recomputing the shared prefix.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import astuple, dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -78,18 +78,22 @@ def _lognormal(rng, mean: float, sigma: float) -> float:
     return float(rng.lognormal(mu, sigma))
 
 
-def _chunk_keys(fid: int, useed, shared_len: int, total_len: int,
+def _chunk_keys(wl, fid: int, useed, shared_len: int, total_len: int,
                 chunk: int) -> List:
     """(key, n_tokens) per consecutive token chunk of a round-0 stream.
     Chunks fully inside the family-shared region key on the family; any
     chunk touching member-unique tokens keys on ``useed`` — identical
     streams therefore produce identical key sequences, and the boundary
-    chunk never false-matches across members."""
+    chunk never false-matches across members. ``wl`` is the full workload
+    spec identity: family ids restart at 0 in every generate() call, so
+    sessions from two different workloads fed to one engine must not
+    false-match each other's radix blocks."""
     out = []
     pos, i = 0, 0
     while pos < total_len:
         n = min(chunk, total_len - pos)
-        key = ("fam", fid, i) if pos + n <= shared_len else ("u", useed, i)
+        key = (("fam", wl, fid, i) if pos + n <= shared_len
+               else ("u", wl, useed, i))
         out.append((key, n))
         pos += n
         i += 1
@@ -99,6 +103,7 @@ def _chunk_keys(fid: int, useed, shared_len: int, total_len: int,
 def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
              tp: int = 1) -> List[Session]:
     rng = np.random.default_rng(spec.seed)
+    wl = astuple(spec)       # workload identity baked into prefix-hash keys
     mean_prompt = ILR_MEAN_PROMPT[spec.regime]
     sessions: List[Session] = []
     # family-level canonical draws: shared repository-context size and the
@@ -159,8 +164,8 @@ def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
         if fid is not None:
             s.meta["family"] = fid
             s.meta["prefix_hashes"] = _chunk_keys(
-                fid, useed, fam_shared[fid], rounds[0].new_input_tokens,
-                spec.chunk_tokens)
+                wl, fid, useed, fam_shared[fid],
+                rounds[0].new_input_tokens, spec.chunk_tokens)
         sessions.append(s)
     return sessions
 

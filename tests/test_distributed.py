@@ -329,6 +329,12 @@ def test_router_resets_kv_accounting_on_leave_and_failure(path):
     for m in moved:
         assert m.kv_blocks == 0 and m.resident_len == 0
         assert m.kv_state == KVState.NONE
+    # the old engine is detached too: no stale membership or leases, so a
+    # heartbeat-recovered replica can keep ticking without tripping
+    assert s not in e1.active and s not in e1.waiting
+    assert e1.blocks.free == e1.blocks.total
+    e1.check_invariants()
+    e1.tick(2.0)
     # re-placement on a fresh replica keeps the new invariants intact
     e2 = _mini_engine()
     r.register("b", e2, now=101.0)
@@ -337,6 +343,64 @@ def test_router_resets_kv_accounting_on_leave_and_failure(path):
     assert r.place(s, now=101.0) == "b"
     e2.tick(0.0)
     e2.check_invariants()
+
+
+def test_router_leave_drops_host_tier_entries():
+    """Draining a replica must clear engine-side host-tier occupancy for the
+    sessions handed back — a reused engine would otherwise carry orphaned
+    host entries and trip its host-occupancy invariant."""
+    from repro.core.session import KVState, Round, make_session
+    r = ClusterRouter()
+    e1 = _mini_engine()
+    r.register("a", e1, now=0.0)
+    r.heartbeat("a", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, now=0.0)
+    s = make_session(0.0, [Round(20_000, 16, None, 0.0)], ideal_time=1.0)
+    assert r.place(s, now=0.0) == "a"
+    now = 0.0
+    for _ in range(3):
+        el, _ = e1.tick(now)
+        now += max(el, 0.05)
+    assert s.kv_blocks > 0
+    # demote to the host tier, as pin revocation under pressure would
+    assert e1._offload_kv(s, now)
+    assert e1.host.holds(s.sid) and s.meta.get("host_tier")
+    moved = r.leave("a", now=now + 1.0)
+    assert s in moved
+    assert s.kv_state == KVState.NONE and "host_tier" not in s.meta
+    assert not e1.host.holds(s.sid)
+    assert e1.host.used_blocks == 0
+    e1.check_invariants()
+
+
+def test_router_failover_cancels_inflight_tools():
+    """A session detached mid-tool must not be resumed by the old
+    (heartbeat-recovered) replica: its queued/running tool is cancelled,
+    so the replica ticking past the tool's end leaves the session — now
+    owned by another replica — untouched."""
+    from repro.core.session import Phase, Round, make_session
+    r = ClusterRouter(RouterConfig(heartbeat_timeout=5.0))
+    e1 = _mini_engine()
+    r.register("a", e1, now=0.0)
+    r.heartbeat("a", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, now=0.0)
+    s = make_session(0.0, [Round(2_000, 8, "t", 50.0),
+                           Round(1_000, 8, None, 0.0)], ideal_time=1.0)
+    assert r.place(s, now=0.0) == "a"
+    now = 0.0
+    while s.phase != Phase.TOOL and now < 100.0:
+        el, _ = e1.tick(now)
+        now += max(el, 0.05)
+    assert s.phase == Phase.TOOL
+    round_before = s.cur_round
+    assert r.check_failures(now=100.0) == ["a"]
+    assert s in r.requeued
+    # recovered replica ticks past the tool's completion time
+    for t in (101.0, 160.0, 200.0):
+        e1.tick(t)
+    assert s.cur_round == round_before and s.phase == Phase.TOOL
+    assert e1.tools.active == 0
+    e1.check_invariants()
 
 
 def test_router_elastic_join_leave():

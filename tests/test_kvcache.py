@@ -285,6 +285,24 @@ def test_duplicate_round0_full_match_triggers_cow():
     eng.check_invariants()
 
 
+def test_boundary_crossing_decode_cows_before_alloc():
+    """First decode step both crosses a block boundary (fresh alloc) and
+    writes an indexed partial tail (CoW). The copy must target the shared
+    tail — regression for alloc-before-CoW, where copy_on_write re-checked
+    the freshly alloc'd private block and silently skipped the copy."""
+    eng = _engine(blocks=12_000)
+    toks = 20_026                    # tail fill 26: 26 + granularity(8) > 32
+    h = [(("g", i), 32) for i in range(toks // 32)] + [(("g", "t"), 26)]
+    s = make_session(0.0, [Round(toks, 32, None, 0.0)], ideal_time=5.0)
+    s.meta["prefix_hashes"] = list(h)
+    finished, _ = run_sim(eng, [s], max_time=1e5)
+    assert len(finished) == 1
+    # round-0 completion indexed the partial tail; the very next decode
+    # allocated a boundary block AND took a private copy of the tail
+    assert eng.blocks.cow_count >= 1
+    eng.check_invariants()
+
+
 def test_generator_families_share_chunk_keys():
     spec = WorkloadSpec(regime="ILR-1", arrival_rate=0.5, n_sessions=12,
                         seed=4, max_context=CONTEXT_LIMIT, n_families=3,
@@ -304,6 +322,21 @@ def test_generator_families_share_chunk_keys():
             shared = sum(1 for a, b in zip(first_keys, keys) if a == b)
             assert shared >= 1           # family prefix in common
             assert keys != first_keys    # unique tails differ (dup_frac=0)
+
+
+def test_generator_keys_distinct_across_workloads():
+    """Family ids restart at 0 every generate() call; the workload-spec
+    identity baked into each chunk key keeps two workloads fed to one
+    engine from false-matching each other's radix blocks."""
+    import dataclasses
+    spec_a = WorkloadSpec(regime="ILR-1", arrival_rate=0.5, n_sessions=8,
+                          seed=1, max_context=CONTEXT_LIMIT, n_families=2)
+    spec_b = dataclasses.replace(spec_a, seed=2)
+    ka = {k for s in generate(spec_a, QWEN3, H100)
+          for k, _ in s.meta.get("prefix_hashes", [])}
+    kb = {k for s in generate(spec_b, QWEN3, H100)
+          for k, _ in s.meta.get("prefix_hashes", [])}
+    assert ka and kb and not (ka & kb)
 
 
 # ---------------------------------------------------------------------------
