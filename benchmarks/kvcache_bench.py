@@ -68,8 +68,10 @@ def _run(spec: WorkloadSpec, *, blocks: int, sharing: bool,
     }
 
 
-def run(quick: bool = True) -> List[Dict]:
-    n = 24 if quick else 48
+def run(quick: bool = True, dry: bool = False) -> List[Dict]:
+    """``dry`` (CI smoke): a minimal workload through every configuration —
+    exercises sharing + three-way retention without timing-grade sizes."""
+    n = 8 if dry else (24 if quick else 48)
     rows: List[Dict] = []
 
     # (a) prefix sharing on/off: ample pool, so the delta isolates sharing
@@ -102,7 +104,13 @@ def run(quick: bool = True) -> List[Dict]:
 
 
 if __name__ == "__main__":
+    import argparse
     import json
-    import sys
-    for row in run(quick="--full" not in sys.argv):
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke: minimal workload, all configurations")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for row in run(quick=not args.full, dry=args.dry):
         print(json.dumps(row))

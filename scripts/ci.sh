@@ -9,3 +9,5 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q
 python benchmarks/kernel_bench.py --dry
+python benchmarks/kvcache_bench.py --dry
+python benchmarks/paged_runner_bench.py --dry

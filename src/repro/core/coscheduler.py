@@ -62,6 +62,10 @@ class OpportunisticCoScheduler:
         # host-tier PCIe cost model, bound by the engine once the tier
         # exists (None => no offload tier => binary pin/drop retention)
         self.swap_seconds: Optional[Callable[[int], float]] = None
+        # per-block offload sizing: session -> tokens that actually cross
+        # PCIe (private blocks only; radix-shared prefix stays on device).
+        # None => whole-context pricing (pre-paged swapper semantics).
+        self.swap_tokens: Optional[Callable] = None
 
     # --- chunk shrinking ------------------------------------------------------
     def shrink_chunk(self, want_tokens: int, free_blocks: int) -> int:
@@ -127,7 +131,12 @@ class OpportunisticCoScheduler:
         if (not self.cfg.enable_offload or self.swap_seconds is None
                 or s.resident_len < self.cfg.offload_min_tokens):
             return float("-inf")
-        t_swap = self.swap_seconds(s.resident_len)
+        # the restore avoids recomputing the WHOLE prefix, but per-block
+        # offload only pays PCIe for the private suffix — shared blocks
+        # are re-referenced on device for free
+        moved = (self.swap_tokens(s) if self.swap_tokens is not None
+                 else s.resident_len)
+        t_swap = self.swap_seconds(moved)
         benefit = self.recompute_time(s.resident_len) - t_swap
         return benefit - self.cfg.offload_price * t_swap
 

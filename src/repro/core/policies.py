@@ -44,11 +44,15 @@ class Policy:
         self.bus = bus
         self.oracle = oracle
         self.host_tier = None          # bound by the engine when tiered
+        self.swap_size_fn = None       # session -> (tokens, blocks) moved
 
-    def bind_services(self, host_tier=None) -> None:
-        """Engine-owned KV services (host-DRAM tier) handed to the policy
-        after construction; baselines ignore them."""
+    def bind_services(self, host_tier=None, swap_size_fn=None) -> None:
+        """Engine-owned KV services handed to the policy after
+        construction: the host-DRAM tier, and the per-block offload sizing
+        (what would *actually* cross PCIe — radix-shared blocks stay on
+        device). Baselines ignore them."""
         self.host_tier = host_tier
+        self.swap_size_fn = swap_size_fn
 
     # --- admission (external) ----------------------------------------------
     def admit(self, queue: List[Session], now: float) -> List[Session]:
@@ -192,17 +196,26 @@ class MARSPolicy(Policy):
         if self.cfg.disable_coscheduler:
             self.name = "mars-no-cosched"
 
-    def bind_services(self, host_tier=None) -> None:
-        super().bind_services(host_tier)
+    def bind_services(self, host_tier=None, swap_size_fn=None) -> None:
+        super().bind_services(host_tier, swap_size_fn)
         self.cosched.swap_seconds = \
             host_tier.swap_seconds if host_tier is not None else None
+        # price the PCIe leg by what per-block offload actually moves
+        self.cosched.swap_tokens = \
+            (lambda s: swap_size_fn(s)[0]) if swap_size_fn else None
 
     def _host_can_take(self, s: Session) -> bool:
+        if self.host_tier is None:
+            return False
+        if self.swap_size_fn is not None:
+            # per-block offload: only private (non-shared) blocks occupy
+            # the tier — same sizing _offload_kv's can_store will apply
+            return self.host_tier.can_store(self.swap_size_fn(s)[1])
         # size with the tier's own block size (= engine block size), not
         # cosched.block_size — they are configured independently and a
         # drifted precheck would disagree with _offload_kv's can_store
-        return (self.host_tier is not None and self.host_tier.can_store(
-            -(-s.resident_len // self.host_tier.block_size)))
+        return self.host_tier.can_store(
+            -(-s.resident_len // self.host_tier.block_size))
 
     # external control plane
     def admit(self, queue, now):

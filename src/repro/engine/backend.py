@@ -12,7 +12,7 @@ Both expose the ``PerfOracle`` the policies need (recompute/swap times).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.session import Session
 from repro.models import perf_model as pm
@@ -21,15 +21,29 @@ from repro.models.config import ModelConfig
 
 @dataclass
 class BatchWork:
-    """One engine tick's worth of GPU work."""
+    """One engine tick's worth of GPU work.
+
+    ``leases`` snapshots every batched session's KV placement (sid -> block
+    ids in lease order == token order) at formation time, and ``cow_copies``
+    lists the tick's copy-on-write events (sid, src_bid, dst_bid) in order —
+    a physical backend executes placement straight from these and never
+    re-derives it from the pool (whose state may already have moved on,
+    e.g. swap-out releases the lease before the bytes are copied off).
+    """
     decodes: List[Tuple[Session, int]]        # (session, n_tokens this quantum)
     prefills: List[Tuple[Session, int]]       # (session, chunk_tokens)
     swapins: List[Tuple[Session, int]]        # (session, tokens restored)
     swapouts: List[Tuple[Session, int]] = None  # (session, tokens offloaded)
+    leases: Dict[int, Tuple[int, ...]] = None   # sid -> block table snapshot
+    cow_copies: List[Tuple[int, int, int]] = None  # (sid, src, dst) in order
 
     def __post_init__(self):
         if self.swapouts is None:
             self.swapouts = []
+        if self.leases is None:
+            self.leases = {}
+        if self.cow_copies is None:
+            self.cow_copies = []
 
     @property
     def empty(self) -> bool:

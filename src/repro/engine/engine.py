@@ -65,10 +65,15 @@ class Engine:
         self.bus = bus or EventBus()
         self.backend = backend
         self.blocks = BlockPool(cfg.total_kv_blocks, cfg.block_size)
-        # prefix sharing is capacity-plane only: the engine swaps block
-        # references, never KV bytes, so it requires a backend whose KV
-        # state lives in the block accounting (sim) or one that copies the
-        # shared prefix on attach — the slot-dense live runner does neither
+        # physical backends bind to the pool so block ids map onto device
+        # pages (paged live runner); sim/slot-dense backends have no hook
+        bind = getattr(backend, "bind_kv_pool", None)
+        if bind is not None:
+            bind(self.blocks)
+        # prefix sharing swaps block references, never KV bytes, so it
+        # requires a backend whose KV state lives in the block accounting
+        # (sim) or whose physical placement follows the block ids (the
+        # paged live runner); the slot-dense live layout is neither
         self.radix: Optional[RadixIndex] = (
             RadixIndex(self.blocks, chunk_tokens=cfg.block_size)
             if (cfg.enable_prefix_sharing
@@ -86,7 +91,8 @@ class Engine:
         self.telem = Telemetry(cfg.telem, self.bus)
         self.policy: Policy = make_policy(policy_name, self.telem, self.bus,
                                           backend, mars_cfg)
-        self.policy.bind_services(host_tier=self.host)
+        self.policy.bind_services(host_tier=self.host,
+                                  swap_size_fn=self._private_swap_size)
         self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
         self.waiting: List[Session] = []
         self.active: List[Session] = []
@@ -177,8 +183,10 @@ class Engine:
                       and s.meta.get("host_tier")]
             for s in tiered:
                 assert self.host.holds(s.sid), f"lost host entry {s.sid}"
-            want = sum(self.blocks.blocks_for(s.meta.get("swapped_len", 0))
-                       for s in tiered)
+            want = sum(            # per-block offload: only private blocks
+                s.meta.get("host_blocks",      # occupy the host tier
+                           self.blocks.blocks_for(s.meta.get("swapped_len", 0)))
+                for s in tiered)
             assert self.host.used_blocks == want, \
                 f"host occupancy: {self.host.used_blocks} != {want}"
 
@@ -253,6 +261,29 @@ class Engine:
                                     self.radix.hit_tokens)
 
     # --- tiered KV helpers ---------------------------------------------
+    def _swap_record(self, s: Session):
+        """Per-block offload plan for ``s``'s current lease: the full
+        (bid, gen, private) record plus the private block/token counts —
+        only private blocks (content lost at release) cross PCIe."""
+        bs = self.cfg.block_size
+        rec = []
+        host_blocks = host_tokens = 0
+        for i, bid in enumerate(self.blocks.lease(s.sid)):
+            private = not self.blocks.survives_release(bid)
+            rec.append((bid, self.blocks.gen(bid), private))
+            if private:
+                host_blocks += 1
+                host_tokens += min(bs, s.resident_len - i * bs)
+        return rec, host_blocks, host_tokens
+
+    def _private_swap_size(self, s: Session):
+        """(tokens, blocks) that would actually move if ``s`` offloaded now
+        — the policy prices retention with this, so radix-shared contexts
+        (cheap to park per-block) are not charged the full-context PCIe
+        cost the pre-paged swapper would have paid."""
+        _rec, blocks, tokens = self._swap_record(s)
+        return tokens, blocks
+
     def _attach_prefix(self, s: Session, now: float) -> bool:
         """Attach to the longest indexed prefix of this session's chunk
         hashes beyond what it already built (shared physical blocks, no
@@ -286,6 +317,14 @@ class Engine:
             bid, _ = matched.pop()
             if self.blocks.is_cached(bid):
                 n_revive -= 1
+        # a backend that really decodes needs the last prompt token's
+        # logits to seed decoding (vLLM semantics: a full prefix hit still
+        # computes >= 1 token), so never let the match cover the entire
+        # pending prefill — the tail chunk is recomputed privately
+        if getattr(self.backend, "requires_last_token_compute", False):
+            while matched and s.resident_len + sum(
+                    n for _, n in matched) >= s.prefill_target:
+                matched.pop()
         if not matched:
             return False
         bids = [b for b, _ in matched]
@@ -333,21 +372,28 @@ class Engine:
             s.meta["radix_inserted"] = True
 
     def _offload_kv(self, s: Session, now: float) -> bool:
-        """Demote resident KV to the host-DRAM tier: device blocks free
-        immediately; the (asynchronous) transfer gates restorability."""
+        """Demote resident KV to the host-DRAM tier, *per block*: only
+        private blocks (content lost at release) cross PCIe and occupy the
+        tier; shared/indexed prefix blocks stay physically on device and are
+        re-referenced at restore by their (bid, gen) certificate. Device
+        blocks free immediately; the (asynchronous) transfer of the private
+        suffix gates restorability."""
         if self.host is None or s.kv_blocks <= 0:
             return False
-        host_blocks = self.blocks.blocks_for(s.resident_len)
+        rec, host_blocks, host_tokens = self._swap_record(s)
         if not self.host.can_store(host_blocks):
             return False
-        self.host.store(s.sid, s.resident_len, host_blocks, now)
+        self.host.store(s.sid, host_tokens, host_blocks, now)
         s.meta["swapped_len"] = s.resident_len
         s.meta["host_tier"] = True
-        self._pending_swapouts.append((s, s.resident_len))
+        s.meta["swap_pages"] = rec
+        s.meta["host_blocks"] = host_blocks
+        s.meta["host_tokens"] = host_tokens
+        self._pending_swapouts.append((s, host_tokens))
         freed = self.blocks.release_all(s.sid)
         assert freed == s.kv_blocks
         self.bus.emit(ev.SWAP_OUT, now, s.sid, blocks=s.kv_blocks,
-                      tier="host")
+                      copied=host_blocks, tier="host")
         s.kv_blocks = 0
         s.resident_len = 0
         s.kv_state = KVState.SWAPPED
@@ -371,6 +417,9 @@ class Engine:
         would otherwise leak it for the life of the server."""
         if s.meta.pop("host_tier", None) and self.host is not None:
             self.host.drop(s.sid)
+        for k in ("swap_pages", "restore_positions", "host_blocks",
+                  "host_tokens"):
+            s.meta.pop(k, None)
         drop = getattr(self.backend, "drop_host", None)
         if drop is not None:
             drop(s.sid)
@@ -462,6 +511,37 @@ class Engine:
                 return True
         return self.blocks.free >= n
 
+    def _restore_lease(self, s: Session) -> bool:
+        """Rebuild a swapped-out session's lease in recorded order: shared
+        blocks are re-referenced on device iff their (bid, gen) certificate
+        still holds; private blocks get fresh pages (the backend fills them
+        from the host copy at the positions in ``meta["restore_positions"]``).
+        Returns False — with the partial lease rolled back — when any shared
+        block's content is gone; the caller falls back to recompute.
+        Capacity for ``blocks_for(swapped_len)`` must already be ensured
+        (reacquire consumes at most one free block per entry, via revive)."""
+        rec = s.meta.get("swap_pages")
+        if rec is None:        # no placement record (externally built meta)
+            need = self.blocks.blocks_for(s.meta.get("swapped_len", 0))
+            ok = self.blocks.alloc(s.sid, need)
+            assert ok, "restore alloc failed despite ensured capacity"
+            s.kv_blocks += need
+            s.meta["restore_positions"] = list(range(need))
+            return True
+        restore: List[int] = []
+        for i, (bid, gen, private) in enumerate(rec):
+            if private:
+                ok = self.blocks.alloc(s.sid, 1)
+                assert ok, "restore alloc failed despite ensured capacity"
+                restore.append(i)
+            elif not self.blocks.reacquire(s.sid, bid, gen):
+                self.blocks.release_all(s.sid)       # roll back partial lease
+                s.meta.pop("restore_positions", None)
+                return False
+        s.kv_blocks += len(rec)
+        s.meta["restore_positions"] = restore
+        return True
+
     def _write_need(self, s: Session, new_tokens: int) -> Tuple[int, int]:
         """(new blocks, CoW blocks) to extend ``s`` by ``new_tokens``:
         writing into a shared/indexed partial tail block requires a private
@@ -536,7 +616,19 @@ class Engine:
                                      prefills, swapins, allow_preempt=True):
                     break
         swapouts, self._pending_swapouts = self._pending_swapouts, []
-        return BatchWork(decodes, prefills, swapins, swapouts)
+        work = BatchWork(decodes, prefills, swapins, swapouts)
+        # placement snapshot: the backend executes from these tables (and
+        # the tick's CoW copy list), never from live pool state — swapped-
+        # out leases are already released, and a bid freed here may be
+        # re-leased to another batch member within this very tick
+        for s, _ in decodes:
+            work.leases[s.sid] = tuple(self.blocks.lease(s.sid))
+        for s, _ in prefills:
+            work.leases[s.sid] = tuple(self.blocks.lease(s.sid))
+        for s, _ in swapins:
+            work.leases[s.sid] = tuple(self.blocks.lease(s.sid))
+        work.cow_copies = self.blocks.drain_cow_log()
+        return work
 
     def _watermark(self) -> int:
         """Block reserve prefills may not dip into: active decodes extend by
@@ -562,22 +654,31 @@ class Engine:
                 return False
             if need <= avail or self._ensure_blocks(
                     need + reserve, now, in_batch, s, allow_preempt):
-                self.blocks.alloc(s.sid, need)
-                s.kv_blocks += need
-                if tiered:           # engineered-DMA restore time, not the
-                    s.meta["swap_cost_s"] = \
-                        self.host.swap_seconds(toks)   # stock swapper's
-                swapins.append((s, toks))
-                in_batch.add(s.sid)
-                return True
-            if not allow_preempt:
+                if self._restore_lease(s):
+                    if tiered:       # engineered-DMA restore time for the
+                        # private suffix only — shared prefix blocks were
+                        # re-referenced on device, no PCIe traffic
+                        s.meta["swap_cost_s"] = self.host.swap_seconds(
+                            s.meta.get("host_tokens", toks))
+                    swapins.append((s, toks))
+                    in_batch.add(s.sid)
+                    return True
+                # a shared block recorded at swap-out lost its content
+                # (cache-evicted / rewritten): the restore certificate is
+                # void — abandon the host copy and rebuild by recompute
+                self._drop_host_copy(s)
+                s.kv_state = KVState.NONE
+                s.meta["swapped_len"] = 0
+            elif not allow_preempt:
                 return False
-            # stall escape hatch: restore blocked on *capacity* with nothing
-            # else schedulable — no timer will fix that, so abandon the host
-            # copy and rebuild by recompute (deadlock freedom).
-            self._drop_host_copy(s)
-            s.kv_state = KVState.NONE
-            s.meta["swapped_len"] = 0
+            else:
+                # stall escape hatch: restore blocked on *capacity* with
+                # nothing else schedulable — no timer will fix that, so
+                # abandon the host copy and rebuild by recompute (deadlock
+                # freedom).
+                self._drop_host_copy(s)
+                s.kv_state = KVState.NONE
+                s.meta["swapped_len"] = 0
         want = min(s.pending_prefill, budget)
         if want <= 0:
             return False
@@ -609,6 +710,9 @@ class Engine:
             s.resident_len = toks
             s.kv_state = KVState.RESIDENT
             s.meta["swapped_len"] = 0
+            for k in ("swap_pages", "restore_positions", "host_blocks",
+                      "host_tokens"):        # consumed by run_batch above
+                s.meta.pop(k, None)
             if s.meta.pop("host_tier", None) and self.host is not None:
                 self.host.load(s.sid, end)       # tier hit: occupancy freed
                 self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,
@@ -671,8 +775,12 @@ class Engine:
             self.bus.emit(ev.PIN, now, s.sid, blocks=s.kv_blocks, ttl=ttl)
         elif action == KVAction.SWAP and s.kv_blocks > 0:
             # legacy path (InferCept baseline): stock-swapper timing, no
-            # tier accounting — the backend charges swap_time() per side
+            # tier accounting — the backend charges swap_time() per side.
+            # Every block is flagged private (whole-context copy): the
+            # stock swapper is blind to sharing.
             s.meta["swapped_len"] = s.resident_len
+            s.meta["swap_pages"] = [(bid, self.blocks.gen(bid), True)
+                                    for bid in self.blocks.lease(s.sid)]
             freed = self.blocks.release_all(s.sid)
             assert freed == s.kv_blocks
             self.bus.emit(ev.SWAP_OUT, now, s.sid, blocks=s.kv_blocks)

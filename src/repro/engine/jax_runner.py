@@ -2,24 +2,38 @@
 really runs jit'd prefill/decode steps of a (reduced) model on this host and
 returns wall-clock seconds.
 
-Slot model: R fixed sequence slots, each with a dense per-slot KV region of
-``max_len`` tokens (jit-stable shapes). The BlockManager still governs
-*capacity* in blocks; physical placement here is slot-dense (the Pallas
-``paged_attention`` kernel demonstrates block-table placement at the kernel
-level — see DESIGN.md §3). Prefill chunks are bucketed to powers of two to
-bound recompilation, and chunked prefill attends to the previously cached
-prefix via ``lm_step`` (exact semantics, not chunk-local attention).
+Two cache layouts, behind one ``_CacheLayout`` strategy surface:
 
-The PerfOracle (recompute_time / prefill_rate / swap_time) is *calibrated* at
-startup by timing one prefill chunk and one decode step — the live analogue
-of the simulator's analytic model.
+* **paged** (default) — a *global pool* of KV pages ``(L, P+1, page, Hkv, D)``
+  driven end-to-end by ``kvcache.pool.BlockPool`` block tables: the engine
+  snapshots each batched session's lease into ``BatchWork.leases`` and the
+  backend executes placement from those tables — prefill scatters chunk KV
+  into leased pages, decode feeds ``(B, max_pages)`` tables to the Pallas
+  ``paged_attention`` kernel (via ``ops.decode_attention``), copy-on-write
+  events are mirrored as device page copies, and host offload moves KV
+  *per block* (only private, non-shared blocks cross PCIe; shared prefix
+  blocks are re-referenced on device at restore). Radix-shared prefix
+  blocks are therefore **physically shared**: a K-session family over one
+  repository context occupies ~ceil(L/page) + K*(private tail) pages. Page
+  id P (one past the pool) is scratch: padded prefill lanes and idle decode
+  lanes park their writes there.
 
-Position ``max_len - 1`` of every slot is scratch: idle decode lanes park
-their writes there, so sessions may use at most ``max_len - 1`` tokens.
+* **dense** — the legacy slot-dense layout (R fixed slots, each a dense
+  ``max_len``-token region; position ``max_len - 1`` is the slot's scratch).
+  Kept for greedy-decode parity testing against the paged path, and as the
+  fallback for attention variants the paged kernel doesn't cover
+  (sliding-window alternation, logit softcaps).
+
+Chunks and lane counts are bucketed to powers of two to bound
+recompilation. The PerfOracle (recompute_time / prefill_rate / swap_time)
+is *calibrated* at startup by timing one prefill chunk, one decode step and
+one page/slot round trip — the live analogue of the simulator's analytic
+model.
 """
 from __future__ import annotations
 
 import time
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,13 +42,16 @@ import numpy as np
 
 from repro.core.session import Session
 from repro.engine.backend import BatchWork
+from repro.kvcache.pool import DeviceBindingMap
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
-from repro.models.transformer import KVCache, lm_step
+from repro.models.transformer import (KVCache, PagedKVCache, lm_decode_paged,
+                                      lm_prefill_paged, lm_step,
+                                      supports_paged)
 
 
-def _bucket(n: int) -> int:
-    b = 32
+def _bucket(n: int, lo: int = 32) -> int:
+    b = lo
     while b < n:
         b *= 2
     return b
@@ -43,17 +60,359 @@ def _bucket(n: int) -> int:
 class JaxBackend:
     name = "jax"
 
-    def __init__(self, cfg: ModelConfig, *, max_slots: int = 8,
-                 max_len: int = 1024, seed: int = 0, dtype=jnp.float32):
+    def __init__(self, cfg: ModelConfig, *, layout: str = "paged",
+                 max_slots: int = 8, max_len: int = 1024,
+                 total_pages: Optional[int] = None, page_size: int = 32,
+                 seed: int = 0, dtype=jnp.float32):
         assert cfg.family in ("dense", "moe"), "live runner serves LM families"
+        assert layout in ("paged", "dense")
+        if layout == "paged" and not supports_paged(cfg):
+            layout = "dense"          # window/softcap: kernel not applicable
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.dtype = dtype
         self.params = model_zoo.init(cfg, jax.random.PRNGKey(seed), dtype)
-        self.cache = model_zoo.cache_zeros(cfg, max_slots, max_len, dtype)
+        self.layout = layout
+        if layout == "paged":
+            if total_pages is None:
+                total_pages = max(1, max_slots * max_len // page_size)
+            self._impl: "_CacheLayout" = _PagedLayout(self, total_pages,
+                                                      page_size)
+        else:
+            self._impl = _DenseLayout(self)
+        # prefix sharing needs placement to follow block ids physically;
+        # a real decoder also needs the last prompt token's logits, so a
+        # full prefix hit must still leave >= 1 token to compute
+        self.supports_prefix_sharing = (layout == "paged")
+        self.requires_last_token_compute = (layout == "paged")
+        self._impl.calibrate()
+
+    # --- engine binding ---------------------------------------------------
+    def bind_kv_pool(self, pool) -> None:
+        """Engine handshake: validates that the engine's BlockPool fits the
+        physical page pool (paged layout) — placement itself always arrives
+        through ``BatchWork.leases`` snapshots, never live pool state."""
+        self._impl.bind_kv_pool(pool)
+
+    def release_session(self, sid: int) -> None:
+        self._impl.release_session(sid)
+
+    def drop_host(self, sid: int) -> None:
+        self._impl.drop_host(sid)
+
+    # --- oracle (calibrated) ----------------------------------------------
+    def _time_once(self, fn) -> float:
+        fn()                                      # compile
+        t0 = time.monotonic()
+        fn()
+        return max(1e-6, time.monotonic() - t0)
+
+    def recompute_time(self, n_tokens: int) -> float:
+        return n_tokens * self._prefill_s_per_tok
+
+    def prefill_rate(self) -> float:
+        return 1.0 / self._prefill_s_per_tok
+
+    def swap_time(self, n_tokens: int) -> float:
+        """Measured host<->device KV bandwidth for the copy path."""
+        return 1e-3 + n_tokens * self.kv_bytes_per_token() / self._h2d_bw
+
+    def kv_bytes_per_token(self) -> float:
+        return self._impl.kv_bytes_per_token()
+
+    # --- execution --------------------------------------------------------
+    def run_batch(self, work: BatchWork, now: float) -> float:
+        if work.empty:
+            return 0.0
+        t0 = time.monotonic()
+        impl = self._impl
+        # device-write ordering within a tick: D2H reads of swapped-out
+        # pages first (their ids may be re-leased to this very batch), then
+        # CoW page copies (their sources may be about to be overwritten),
+        # then H2D restores, then compute writes
+        for s, _toks in work.swapouts:
+            impl.swap_out(s)
+        impl.apply_cow(work.cow_copies)
+        for s, _toks in work.swapins:
+            impl.swap_in(s, work.leases.get(s.sid, ()))
+        for s, chunk in work.prefills:
+            impl.prefill(s, chunk, work.leases.get(s.sid, ()))
+        if work.decodes:
+            impl.decodes(work.decodes, work.leases)
+        return time.monotonic() - t0
+
+    # --- deterministic synthetic context ----------------------------------
+    def _context_ids(self, s: Session) -> List[int]:
+        """Token ids are *content-addressed*: round-0 chunks derive from
+        their prefix-hash keys (same chunk key => same tokens, so physically
+        shared prefix pages hold exactly the bytes every family member would
+        have computed) and everything beyond draws by (sid, absolute
+        position) — re-entrant, so growing ``prefill_target`` after decode
+        appends never re-draws earlier positions from the stream start."""
+        ids = s.meta.setdefault("context_ids", [])
+        target = s.prefill_target
+        V = self.cfg.vocab_size
+        hashes = s.meta.get("prefix_hashes")
+        if hashes:
+            round0 = sum(n for _, n in hashes)
+            if len(ids) < round0:          # (no decode happened yet: round 0
+                ids.clear()                #  must fully prefill first)
+                for key, n in hashes:
+                    rng = np.random.default_rng(
+                        zlib.crc32(repr(key).encode()))
+                    ids.extend(int(x) for x in rng.integers(2, V, size=n))
+        while len(ids) < target:
+            pos = len(ids)
+            ids.append(int(np.random.default_rng((s.sid, pos))
+                           .integers(2, V)))
+        return ids
+
+
+# ---------------------------------------------------------------------------
+# layout strategies
+# ---------------------------------------------------------------------------
+
+class _CacheLayout:
+    """Physical KV placement strategy: prefill/decode/swap/CoW execution."""
+
+    def bind_kv_pool(self, pool) -> None: ...
+    def calibrate(self) -> None: ...
+    def kv_bytes_per_token(self) -> float: ...
+    def release_session(self, sid: int) -> None: ...
+    def drop_host(self, sid: int) -> None: ...
+    def swap_out(self, s: Session) -> None: ...
+    def swap_in(self, s: Session, lease) -> None: ...
+    def apply_cow(self, copies) -> None: ...
+    def prefill(self, s: Session, chunk: int, lease) -> None: ...
+    def decodes(self, decodes, leases) -> None: ...
+
+
+class _PagedLayout(_CacheLayout):
+    """Global page pool driven by BlockPool block tables."""
+
+    def __init__(self, backend: JaxBackend, total_pages: int, page: int):
+        self.b = backend
+        self.page = page
+        self.total_pages = total_pages
+        self.binding = DeviceBindingMap(total_pages)
+        self.scratch = self.binding.scratch_page
+        cfg, dtype = backend.cfg, backend.dtype
+        self.cache = PagedKVCache.zeros(cfg, total_pages + 1, page, dtype)
+        # host copies of offloaded private blocks:
+        # sid -> (k (L, n, page, Hkv, D), v (...)) in swap-record order
+        self._host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+        def _decode(params, cache, tokens, positions, tables, lengths,
+                    wpid, woff):
+            logits, cache = lm_decode_paged(cfg, params, cache, tokens,
+                                            positions, tables, lengths,
+                                            wpid, woff)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        def _prefill(params, cache, tokens, positions, table, wpid, woff,
+                     last_idx):
+            logits, cache = lm_prefill_paged(cfg, params, cache, tokens,
+                                             positions, table, wpid, woff)
+            nxt = jnp.argmax(logits[0, last_idx], axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        def _copy_page(cache, src, dst):
+            return PagedKVCache(cache.k.at[:, dst].set(cache.k[:, src]),
+                                cache.v.at[:, dst].set(cache.v[:, src]))
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
+        self._copy_fn = jax.jit(_copy_page, donate_argnums=(0,))
+
+    # --- binding / oracle -------------------------------------------------
+    def bind_kv_pool(self, pool) -> None:
+        assert pool.block_size == self.page, \
+            f"pool block_size {pool.block_size} != page {self.page}"
+        assert pool.total <= self.total_pages, \
+            f"pool of {pool.total} blocks exceeds {self.total_pages} pages"
+
+    def kv_bytes_per_token(self) -> float:
+        k = self.cache.k             # (L, P, page, Hkv, D)
+        per_tok = 2 * k.size // (k.shape[1] * k.shape[2]) * k.dtype.itemsize
+        return float(per_tok)
+
+    def calibrate(self) -> None:
+        b = self.b
+        C = 64
+        toks = np.zeros((1, C), np.int32)
+        pos = np.arange(C, dtype=np.int32)[None]
+        Np = _bucket(C // self.page + 1, lo=2)
+        table = np.full((Np,), self.scratch, np.int32)
+        wpid = np.full((C,), self.scratch, np.int32)
+        woff = np.arange(C, dtype=np.int32) % self.page
+
+        def pf():
+            nxt, self.cache = self._prefill_fn(
+                b.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(table), jnp.asarray(wpid), jnp.asarray(woff),
+                C - 1)
+            nxt.block_until_ready()
+
+        b._prefill_s_per_tok = b._time_once(pf) / C
+        B = _bucket(b.max_slots, lo=1)
+        tok1 = np.zeros((B,), np.int32)
+        pos1 = np.zeros((B,), np.int32)
+        tables = np.full((B, 2), self.scratch, np.int32)
+        lens = np.ones((B,), np.int32)
+        wp = np.full((B,), self.scratch, np.int32)
+        wo = np.zeros((B,), np.int32)
+
+        def df():
+            nxt, self.cache = self._decode_fn(
+                b.params, self.cache, jnp.asarray(tok1), jnp.asarray(pos1),
+                jnp.asarray(tables), jnp.asarray(lens), jnp.asarray(wp),
+                jnp.asarray(wo))
+            nxt.block_until_ready()
+
+        b._decode_s_per_step = b._time_once(df)
+        page_bytes = 2 * self.cache.k[:, 0].size * self.cache.k.dtype.itemsize
+
+        def xfer():
+            host = (jax.device_get(self.cache.k[:, 0]),
+                    jax.device_get(self.cache.v[:, 0]))
+            dev = (jax.device_put(host[0]), jax.device_put(host[1]))
+            dev[0].block_until_ready()
+            dev[1].block_until_ready()
+
+        # round trip moves page_bytes each way; swap_time charges one
+        # direction per call, so price it at the two-direction average
+        b._h2d_bw = max(1e6, 2 * page_bytes / b._time_once(xfer))
+
+    # --- session / host state ---------------------------------------------
+    def release_session(self, sid: int) -> None:
+        pass                         # placement is the engine's lease state
+
+    def drop_host(self, sid: int) -> None:
+        self._host.pop(sid, None)
+
+    # --- swap: per-block host offload -------------------------------------
+    def swap_out(self, s: Session) -> None:
+        """D2H-copy only the blocks flagged private in the engine's swap
+        record; shared/indexed prefix blocks stay resident on device."""
+        rec = s.meta.get("swap_pages")
+        if rec is None:
+            return
+        pids = [self.binding.page_of(bid) for bid, _gen, private in rec
+                if private]
+        if not pids:
+            self._host[s.sid] = (None, None)
+            return
+        idx = np.asarray(pids, np.int32)
+        self._host[s.sid] = (jax.device_get(self.cache.k[:, idx]),
+                             jax.device_get(self.cache.v[:, idx]))
+
+    def swap_in(self, s: Session, lease) -> None:
+        """H2D-restore private blocks into the freshly allocated pages at
+        ``meta["restore_positions"]``; reacquired shared blocks need no
+        transfer — their pages were never rewritten (gen-certified)."""
+        host = self._host.pop(s.sid, None)
+        if host is None or host[0] is None:
+            return
+        restore = s.meta.get("restore_positions", [])
+        pids = [self.binding.page_of(lease[i]) for i in restore]
+        assert len(pids) == host[0].shape[1], \
+            f"restore mismatch: {len(pids)} pages, {host[0].shape[1]} copies"
+        idx = np.asarray(pids, np.int32)
+        self.cache = PagedKVCache(
+            self.cache.k.at[:, idx].set(jnp.asarray(host[0])),
+            self.cache.v.at[:, idx].set(jnp.asarray(host[1])))
+
+    def apply_cow(self, copies) -> None:
+        """Mirror the tick's copy-on-write events as device page copies, in
+        log order (a later copy may source a page an earlier one freed)."""
+        for _sid, src, dst in copies:
+            self.cache = self._copy_fn(self.cache,
+                                       self.binding.page_of(src),
+                                       self.binding.page_of(dst))
+
+    # --- compute ----------------------------------------------------------
+    def prefill(self, s: Session, chunk: int, lease) -> None:
+        b, page = self.b, self.page
+        ids = b._context_ids(s)
+        start = s.resident_len
+        segment = ids[start:start + chunk]
+        C = _bucket(len(segment))
+        # gathered view must cover the lease and end in a scratch page (the
+        # padded lanes' parking position)
+        n_need = max(len(lease), -(-(start + C) // page)) + 1
+        Np = _bucket(n_need, lo=2)
+        table = self.binding.table(lease, width=Np)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :len(segment)] = segment
+        pos = np.full((C,), Np * page - 1, np.int32)
+        pos[:len(segment)] = np.arange(start, start + len(segment))
+        wpid = np.full((C,), self.scratch, np.int32)
+        woff = np.zeros((C,), np.int32)
+        for i in range(len(segment)):
+            wpid[i] = self.binding.page_of(lease[(start + i) // page])
+            woff[i] = (start + i) % page
+        nxt, self.cache = self._prefill_fn(
+            b.params, self.cache, jnp.asarray(toks), jnp.asarray(pos[None]),
+            jnp.asarray(table), jnp.asarray(wpid), jnp.asarray(woff),
+            len(segment) - 1)
+        s.meta["next_token"] = int(nxt)
+
+    def decodes(self, decodes, leases) -> None:
+        b, page = self.b, self.page
+        live = [(s, leases[s.sid], g) for s, g in decodes]
+        B = _bucket(len(live), lo=1)
+        maxp = _bucket(max(len(l) for _, l, _ in live), lo=1)
+        tables = np.full((B, maxp), self.scratch, np.int32)
+        for i, (_s, lease, _g) in enumerate(live):
+            tables[i, :len(lease)] = [self.binding.page_of(x) for x in lease]
+        g_max = max(g for _, _, g in live)
+        jtables = jnp.asarray(tables)
+        for step in range(g_max):
+            toks = np.zeros((B,), np.int32)
+            pos = np.zeros((B,), np.int32)
+            lens = np.ones((B,), np.int32)
+            wpid = np.full((B,), self.scratch, np.int32)
+            woff = np.zeros((B,), np.int32)
+            active: List[Tuple[Session, int]] = []
+            for i, (s, lease, g) in enumerate(live):
+                if step >= g:
+                    continue
+                p = s.resident_len + step
+                toks[i] = s.meta.get("next_token", 1)
+                pos[i] = p
+                lens[i] = p + 1
+                wpid[i] = self.binding.page_of(lease[p // page])
+                woff[i] = p % page
+                active.append((s, i))
+            if not active:
+                break
+            nxt, self.cache = self._decode_fn(
+                b.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+                jtables, jnp.asarray(lens), jnp.asarray(wpid),
+                jnp.asarray(woff))
+            nxt = np.asarray(nxt)
+            for s, i in active:
+                tok = int(nxt[i])
+                s.meta.setdefault("generated", []).append(tok)
+                s.meta["next_token"] = tok
+                s.meta.setdefault("context_ids", []).append(tok)
+
+
+class _DenseLayout(_CacheLayout):
+    """Slot-dense legacy layout: R fixed slots of ``max_len`` dense tokens.
+
+    Position ``max_len - 1`` of every slot is scratch: idle decode lanes
+    park their writes there, so sessions may use at most ``max_len - 1``
+    tokens. Host offload copies whole slots (no block granularity)."""
+
+    def __init__(self, backend: JaxBackend):
+        self.b = backend
+        cfg, dtype = backend.cfg, backend.dtype
+        self.cache = model_zoo.cache_zeros(cfg, backend.max_slots,
+                                           backend.max_len, dtype)
         self._slots: Dict[int, int] = {}          # sid -> slot
-        self._free_slots = list(range(max_slots))
+        self._free_slots = list(range(backend.max_slots))
         self._host_kv: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
         def _decode(params, cache, tokens, positions):
@@ -69,14 +428,53 @@ class JaxBackend:
             vs = jax.lax.dynamic_slice_in_dim(cache.v, slot, 1, axis=1)
             logits, sub = lm_step(cfg, params, KVCache(ks, vs), tokens,
                                   positions)
-            k = jax.lax.dynamic_update_slice_in_dim(cache.k, sub.k, slot, axis=1)
-            v = jax.lax.dynamic_update_slice_in_dim(cache.v, sub.v, slot, axis=1)
+            k = jax.lax.dynamic_update_slice_in_dim(cache.k, sub.k, slot,
+                                                    axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache.v, sub.v, slot,
+                                                    axis=1)
             nxt = jnp.argmax(logits[0, last_idx], axis=-1).astype(jnp.int32)
             return nxt, KVCache(k, v)
 
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
-        self._calibrate()
+
+    # --- oracle -----------------------------------------------------------
+    def kv_bytes_per_token(self) -> float:
+        k = self.cache.k
+        # (L, S, T, H, D) slot-dense layout: bytes/token = all-but-T dims
+        per_tok = 2 * k.size // (k.shape[1] * k.shape[2]) * k.dtype.itemsize
+        return float(per_tok)
+
+    def calibrate(self) -> None:
+        b = self.b
+        toks = jnp.zeros((1, 64), jnp.int32)
+        pos = jnp.arange(64, dtype=jnp.int32)[None]
+
+        def pf():
+            nxt, self.cache = self._prefill_fn(b.params, self.cache, toks,
+                                               pos, 0, 63)
+            nxt.block_until_ready()
+
+        b._prefill_s_per_tok = b._time_once(pf) / 64
+        tok1 = jnp.zeros((b.max_slots,), jnp.int32)
+        pos1 = jnp.full((b.max_slots,), b.max_len - 1, jnp.int32)
+
+        def df():
+            nxt, self.cache = self._decode_fn(b.params, self.cache, tok1,
+                                              pos1)
+            nxt.block_until_ready()
+
+        b._decode_s_per_step = b._time_once(df)
+        slot_bytes = 2 * self.cache.k[:, 0].size * self.cache.k.dtype.itemsize
+
+        def xfer():
+            host = (jax.device_get(self.cache.k[:, 0]),
+                    jax.device_get(self.cache.v[:, 0]))
+            dev = (jax.device_put(host[0]), jax.device_put(host[1]))
+            dev[0].block_until_ready()
+            dev[1].block_until_ready()
+
+        b._h2d_bw = max(1e6, 2 * slot_bytes / b._time_once(xfer))
 
     # --- slots ------------------------------------------------------------
     def _slot_of(self, sid: int) -> int:
@@ -90,65 +488,11 @@ class JaxBackend:
         if slot is not None:
             self._free_slots.append(slot)
 
-    # --- oracle (calibrated) -----------------------------------------------
-    def _time_once(self, fn) -> float:
-        fn()                                      # compile
-        t0 = time.monotonic()
-        fn()
-        return max(1e-6, time.monotonic() - t0)
+    def drop_host(self, sid: int) -> None:
+        self._host_kv.pop(sid, None)
 
-    def _calibrate(self) -> None:
-        toks = jnp.zeros((1, 64), jnp.int32)
-        pos = jnp.arange(64, dtype=jnp.int32)[None]
-
-        def pf():
-            nxt, self.cache = self._prefill_fn(self.params, self.cache, toks,
-                                               pos, 0, 63)
-            nxt.block_until_ready()
-
-        self._prefill_s_per_tok = self._time_once(pf) / 64
-        tok1 = jnp.zeros((self.max_slots,), jnp.int32)
-        pos1 = jnp.full((self.max_slots,), self.max_len - 1, jnp.int32)
-
-        def df():
-            nxt, self.cache = self._decode_fn(self.params, self.cache, tok1,
-                                              pos1)
-            nxt.block_until_ready()
-
-        self._decode_s_per_step = self._time_once(df)
-        # host<->device bandwidth for the offload tier: one slot round trip
-        slot_bytes = 2 * self.cache.k[:, 0].size * self.cache.k.dtype.itemsize
-
-        def xfer():
-            host = (jax.device_get(self.cache.k[:, 0]),
-                    jax.device_get(self.cache.v[:, 0]))
-            dev = (jax.device_put(host[0]), jax.device_put(host[1]))
-            dev[0].block_until_ready()
-            dev[1].block_until_ready()
-
-        # full round trip moves slot_bytes each way; swap_time charges one
-        # direction per call, so price it at the two-direction average rather
-        # than extrapolating D2H bandwidth onto H2D transfers
-        self._h2d_bw = max(1e6, 2 * slot_bytes / self._time_once(xfer))
-
-    def recompute_time(self, n_tokens: int) -> float:
-        return n_tokens * self._prefill_s_per_tok
-
-    def prefill_rate(self) -> float:
-        return 1.0 / self._prefill_s_per_tok
-
-    def swap_time(self, n_tokens: int) -> float:
-        """Measured host<->device KV bandwidth for the slot-copy path."""
-        return 1e-3 + n_tokens * self.kv_bytes_per_token() / self._h2d_bw
-
-    def kv_bytes_per_token(self) -> float:
-        k = self.cache.k
-        # (L, S, T, H, D) slot-dense layout: bytes per token = all-but-T dims
-        per_tok = 2 * k.size // (k.shape[1] * k.shape[2]) * k.dtype.itemsize
-        return float(per_tok)
-
-    # --- host offload (the live analogue of kvcache.host_tier) -----------
-    def _swap_out(self, s: Session) -> None:
+    # --- whole-slot host offload ------------------------------------------
+    def swap_out(self, s: Session) -> None:
         slot = self._slots.get(s.sid)
         if slot is None:
             return
@@ -156,7 +500,7 @@ class JaxBackend:
                                 jax.device_get(self.cache.v[:, slot]))
         self.release_session(s.sid)
 
-    def _swap_in(self, s: Session) -> None:
+    def swap_in(self, s: Session, lease) -> None:
         host = self._host_kv.pop(s.sid, None)
         if host is None:
             return
@@ -165,55 +509,34 @@ class JaxBackend:
         v = self.cache.v.at[:, slot].set(jnp.asarray(host[1]))
         self.cache = KVCache(k, v)
 
-    def drop_host(self, sid: int) -> None:
-        self._host_kv.pop(sid, None)
+    def apply_cow(self, copies) -> None:
+        pass                  # no physical sharing: nothing aliases a slot
 
-    # --- execution ------------------------------------------------------------
-    def run_batch(self, work: BatchWork, now: float) -> float:
-        if work.empty:
-            return 0.0
-        t0 = time.monotonic()
-        for s, _toks in work.swapouts:
-            self._swap_out(s)
-        for s, _toks in work.swapins:
-            self._swap_in(s)
-        for s, chunk in work.prefills:
-            self._run_prefill(s, chunk)
-        if work.decodes:
-            self._run_decodes(work.decodes)
-        return time.monotonic() - t0
-
-    # ------------------------------------------------------------------
-    def _context_ids(self, s: Session) -> List[int]:
-        ids = s.meta.setdefault("context_ids", [])
-        target = s.prefill_target
-        rng = np.random.default_rng(s.sid)
-        while len(ids) < target:
-            ids.append(int(rng.integers(2, self.cfg.vocab_size)))
-        return ids
-
-    def _run_prefill(self, s: Session, chunk: int) -> None:
+    # --- compute ----------------------------------------------------------
+    def prefill(self, s: Session, chunk: int, lease) -> None:
+        b = self.b
         slot = self._slot_of(s.sid)
-        ids = self._context_ids(s)
+        ids = b._context_ids(s)
         start = s.resident_len
         segment = ids[start:start + chunk]
-        b = _bucket(len(segment))
-        toks = np.zeros((1, b), np.int32)
+        bk = _bucket(len(segment))
+        toks = np.zeros((1, bk), np.int32)
         toks[0, :len(segment)] = segment
-        pos = np.arange(start, start + b, dtype=np.int32)
+        pos = np.arange(start, start + bk, dtype=np.int32)
         # padded lanes park at the scratch position
-        pos[len(segment):] = self.max_len - 1
+        pos[len(segment):] = b.max_len - 1
         nxt, self.cache = self._prefill_fn(
-            self.params, self.cache, jnp.asarray(toks),
+            b.params, self.cache, jnp.asarray(toks),
             jnp.asarray(pos[None]), slot, len(segment) - 1)
         s.meta["next_token"] = int(nxt)
 
-    def _run_decodes(self, decodes: List[Tuple[Session, int]]) -> None:
+    def decodes(self, decodes, leases) -> None:
+        b = self.b
         g_max = max(g for _, g in decodes)
-        scratch = self.max_len - 1
+        scratch = b.max_len - 1
         for step in range(g_max):
-            toks = np.zeros((self.max_slots,), np.int32)
-            pos = np.full((self.max_slots,), scratch, np.int32)
+            toks = np.zeros((b.max_slots,), np.int32)
+            pos = np.full((b.max_slots,), scratch, np.int32)
             live = []
             for s, g in decodes:
                 if step >= g:
@@ -225,7 +548,7 @@ class JaxBackend:
             if not live:
                 break
             nxt, self.cache = self._decode_fn(
-                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+                b.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
             nxt = np.asarray(nxt)
             for s, slot in live:
                 tok = int(nxt[slot])

@@ -62,9 +62,16 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
-                    interpret: bool = True):
+                    interpret: bool = None):
     """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D);
-    block_table: (B, max_pages) int32; lengths: (B,) int32 -> (B, Hq, D)."""
+    block_table: (B, max_pages) int32; lengths: (B,) int32 -> (B, Hq, D).
+
+    ``interpret`` defaults by backend: compiled on TPU, interpreter
+    everywhere else (this is a TPU Mosaic kernel — CPU CI and GPU hosts
+    must not try to lower it) — resolved at trace time, so the jit cache
+    keys on the resolved static value."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, Hq, D = q.shape
     P, page, Hkv, _ = k_pages.shape
     max_pages = block_table.shape[1]

@@ -10,8 +10,8 @@ Three layers that together replace the counter-only block manager:
                   the third retention outcome (PIN / OFFLOAD / DROP).
 """
 from repro.kvcache.host_tier import HostTier, HostTierConfig
-from repro.kvcache.pool import BlockPool, TieredPoolProbe
+from repro.kvcache.pool import BlockPool, DeviceBindingMap, TieredPoolProbe
 from repro.kvcache.radix import RadixIndex
 
-__all__ = ["BlockPool", "TieredPoolProbe", "RadixIndex", "HostTier",
-           "HostTierConfig"]
+__all__ = ["BlockPool", "DeviceBindingMap", "TieredPoolProbe", "RadixIndex",
+           "HostTier", "HostTierConfig"]

@@ -12,7 +12,16 @@ same ``probe()`` surface (``total`` / ``free`` / ``pinned``), adding:
   allocation pressure with a callback into the index);
 * **copy-on-write** — writing into a partially-filled tail block that is
   shared (refcount > 1) or index-registered first copies it to a private
-  block, so cached prefix content stays pristine for future matchers.
+  block, so cached prefix content stays pristine for future matchers;
+* **device placement** — every block id doubles as a *device page id*
+  through a :class:`DeviceBindingMap`; ``block_table(sid)`` exports the
+  session's lease as an int32 page table (lease order == token order) that
+  the live paged runner feeds straight to the Pallas ``paged_attention``
+  kernel. Content *generations* (bumped whenever a page may be rewritten)
+  let a swapped-out session ``reacquire`` still-live shared blocks on
+  restore instead of copying them back over PCIe, and the ``cow_log``
+  records (sid, src, dst) pairs so a physical backend can mirror each
+  copy-on-write as a device page copy.
 
 Capacity semantics the engine relies on: ``free`` counts allocatable blocks
 *including* cached ones; ``free + physical_in_use == total`` always holds.
@@ -20,9 +29,45 @@ Capacity semantics the engine relies on: ``free`` counts allocatable blocks
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.engine.block_manager import BlockPoolProbe
+
+
+class DeviceBindingMap:
+    """Block id -> device page id for a physical page pool.
+
+    The live runner allocates ``n_device_pages`` KV pages plus one scratch
+    page; the binding is identity (bid ``i`` lives in page ``i``), which this
+    class makes explicit so a future remapping (e.g. per-device sub-pools
+    under tensor parallelism) only touches this map. ``scratch_page`` is the
+    parking target for padded/idle lanes and is never handed to a session.
+    """
+
+    def __init__(self, n_device_pages: int):
+        assert n_device_pages > 0
+        self.n_device_pages = n_device_pages
+
+    @property
+    def scratch_page(self) -> int:
+        return self.n_device_pages
+
+    def page_of(self, bid: int) -> int:
+        assert 0 <= bid < self.n_device_pages, f"unbound block {bid}"
+        return bid
+
+    def table(self, bids: Sequence[int], width: Optional[int] = None
+              ) -> np.ndarray:
+        """int32 page table for ``bids`` in order, padded with the scratch
+        page to ``width`` (>= len(bids)) when given."""
+        n = len(bids) if width is None else width
+        assert n >= len(bids)
+        out = np.full((n,), self.scratch_page, np.int32)
+        for i, bid in enumerate(bids):
+            out[i] = self.page_of(bid)
+        return out
 
 
 class TieredPoolProbe(BlockPoolProbe):
@@ -51,6 +96,15 @@ class BlockPool:
         self._leases: Dict[int, List[int]] = {}        # sid -> ordered bids
         self._leased = 0                   # running sum(len(lease)) — keeps
         self._evict_cb: Optional[Callable[[int], None]] = None  # probe O(1)
+        # content generation per block: bumped whenever the page may be
+        # rewritten (fresh take, or unindexed while still referenced so its
+        # sole owner can write in place). A (bid, gen) pair therefore
+        # certifies page content across a swap-out/swap-in gap.
+        self._gen: List[int] = [0] * total_blocks
+        # (sid, src_bid, dst_bid) per copy_on_write, in order — a physical
+        # backend drains this each tick and mirrors the copies on device
+        # before any page writes.
+        self.cow_log: List[Tuple[int, int, int]] = []
 
     # --- capacity ------------------------------------------------------
     @property
@@ -80,6 +134,32 @@ class BlockPool:
     def is_cached(self, bid: int) -> bool:
         return bid in self._cached
 
+    def gen(self, bid: int) -> int:
+        """Content generation of ``bid`` (see class docstring)."""
+        return self._gen[bid]
+
+    def survives_release(self, bid: int) -> bool:
+        """True if the block's content outlives one reference drop: another
+        session still references it, or the radix index parks it cached.
+        Such blocks need no host copy on swap-out — they stay on device."""
+        return self._ref.get(bid, 0) > 1 or bid in self._in_index
+
+    def block_table(self, sid: int, binding: Optional[DeviceBindingMap] = None,
+                    width: Optional[int] = None) -> np.ndarray:
+        """The session's lease as an int32 device page table (lease order ==
+        token order). With no binding the block ids *are* the page ids and
+        no padding is possible — only a binding knows a safe (scratch) pad
+        page, so ``width`` requires one."""
+        lease = self._leases.get(sid, [])
+        if binding is not None:
+            return binding.table(lease, width)
+        assert width is None, "padded tables need a DeviceBindingMap"
+        return np.asarray(lease, np.int32)
+
+    def drain_cow_log(self) -> List[Tuple[int, int, int]]:
+        log, self.cow_log = self.cow_log, []
+        return log
+
     # --- index hooks (radix) -------------------------------------------
     def set_evict_callback(self, cb: Callable[[int], None]) -> None:
         """Called with a bid when allocation pressure reclaims a cached
@@ -91,8 +171,11 @@ class BlockPool:
 
     def unindex_block(self, bid: int) -> None:
         """Index dropped its mapping: if the block was parked cached, its
-        content is no longer reachable — return it to the free list."""
+        content is no longer reachable — return it to the free list. Either
+        way the content is no longer certified (a still-referenced block's
+        sole owner may now write it in place without CoW), so bump gen."""
         self._in_index.discard(bid)
+        self._gen[bid] += 1
         if bid in self._cached:
             del self._cached[bid]
             self._free_ids.append(bid)
@@ -100,11 +183,13 @@ class BlockPool:
     # --- allocation ----------------------------------------------------
     def _take_physical(self) -> int:
         if self._free_ids:
-            return self._free_ids.pop()
-        bid, _ = self._cached.popitem(last=False)      # evict LRU cached
-        self._in_index.discard(bid)
-        if self._evict_cb is not None:
-            self._evict_cb(bid)
+            bid = self._free_ids.pop()
+        else:
+            bid, _ = self._cached.popitem(last=False)  # evict LRU cached
+            self._in_index.discard(bid)
+            if self._evict_cb is not None:
+                self._evict_cb(bid)
+        self._gen[bid] += 1                # fresh owner will overwrite
         return bid
 
     def alloc(self, sid: int, n: int) -> bool:
@@ -132,6 +217,25 @@ class BlockPool:
                 self._ref[bid] += 1
             lease.append(bid)
             self._leased += 1
+
+    def reacquire(self, sid: int, bid: int, gen: int) -> bool:
+        """Re-reference a block recorded at swap-out time *iff* its content
+        is certifiably unchanged (same generation) and still resident
+        (referenced by another session or parked cached). Appends to
+        ``sid``'s lease like acquire(); returns False when the content is
+        gone and the caller must fall back to restore/recompute."""
+        if self._gen[bid] != gen:
+            return False
+        if bid in self._ref:
+            self._ref[bid] += 1
+        elif bid in self._cached:
+            del self._cached[bid]
+            self._ref[bid] = 1
+        else:
+            return False                   # free-listed: content not certified
+        self._leases.setdefault(sid, []).append(bid)
+        self._leased += 1
+        return True
 
     def _drop_ref(self, bid: int) -> None:
         r = self._ref[bid] - 1
@@ -175,6 +279,7 @@ class BlockPool:
         lease[-1] = new
         self._drop_ref(old)
         self.cow_count += 1
+        self.cow_log.append((sid, old, new))
         return True
 
     # --- pinning (counts, as before) -----------------------------------

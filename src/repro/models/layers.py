@@ -179,6 +179,20 @@ def attention(q, k, v, q_pos, kv_pos, *, kv_valid=None, causal: bool = True,
     return jnp.moveaxis(ob, 0, 1).reshape(B, Sq, H, D)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
+    """Single-token decode attention over a paged KV pool.
+
+    q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); block_table: (B, max_pages)
+    int32 device page ids in token order; lengths: (B,) valid kv tokens.
+    Dispatches to the Pallas ``paged_attention`` kernel on TPU (block table
+    scalar-prefetched so the page index_map steers HBM->VMEM DMA) and to the
+    jnp gather oracle elsewhere. No sliding-window / softcap support — the
+    paged layout is gated on configs without them.
+    """
+    from repro.kernels import ops                  # lazy: keeps layers cheap
+    return ops.decode_attention(q, k_pages, v_pages, block_table, lengths)
+
+
 def init_attn(cfg: ModelConfig, key, dtype) -> Params:
     D = cfg.d_model
     k1, k2, k3, k4 = jax.random.split(key, 4)

@@ -23,7 +23,7 @@ from repro.models import layers as L
 from repro.models.layers import (ParallelCtx, apply_norm, attention, attn_out,
                                  attn_qkv, constrain, init_attn, init_mlp,
                                  init_moe, init_norm, mha, mlp, moe_ffn,
-                                 moe_ffn_ep_local)
+                                 moe_ffn_ep_local, paged_decode_attention)
 
 F32 = jnp.float32
 
@@ -271,6 +271,132 @@ def lm_decode(cfg: ModelConfig, params, cache: KVCache, tokens, positions, *,
     logits, cache = lm_step(cfg, params, cache, tokens[:, None],
                             positions[:, None], pctx=pctx)
     return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV: physical page-pool layout driven by BlockPool block tables.
+#
+# The cache is a *global* pool of P pages of `page` tokens each, shared by
+# every session on the device: a sequence's KV lives wherever its block
+# table points, so two sessions prefix-sharing a repository context read the
+# SAME physical pages (the live analogue of the kvcache radix accounting).
+# Page id P-1 by convention is scratch: padded prefill lanes and idle decode
+# lanes park their writes there.
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """The paged decode path covers plain causal GQA; sliding-window
+    alternation and logit softcaps (gemma2) stay on the dense layout."""
+    return (cfg.family in ("dense", "moe") and cfg.sliding_window is None
+            and cfg.attn_logit_softcap is None)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """Paged per-layer KV pool: k/v (L, P, page, Hkv, Dh)."""
+    k: jax.Array
+    v: jax.Array
+
+    def tree_flatten(self):
+        return (self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, n_pages: int, page: int,
+              dtype=jnp.bfloat16):
+        shp = (cfg.n_layers, n_pages, page, cfg.n_kv_heads, cfg.head_dim_)
+        return cls(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+
+def lm_decode_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
+                    positions, block_tables, lengths, write_pages,
+                    write_offsets, *, pctx: Optional[ParallelCtx] = None):
+    """One decode step against the global page pool.
+
+    tokens/positions: (B,) int32 (absolute positions for RoPE);
+    block_tables: (B, max_pages) int32 device page ids in token order;
+    lengths: (B,) valid kv tokens AFTER this step's write (pos + 1);
+    write_pages/write_offsets: (B,) — the page/slot each lane's new KV
+    lands in (idle lanes point at the scratch page).
+    Returns (logits (B, V), updated cache).
+    """
+    assert supports_paged(cfg), "paged decode: unsupported attention variant"
+    B = tokens.shape[0]
+    x = _embed(cfg, params, tokens[:, None])          # (B, 1, D)
+    x = constrain(x, pctx, _decode_dp(pctx, B), None, None)
+    q_pos = positions[:, None]
+
+    def body(x, scanned):
+        lp, k_l, v_l = scanned                        # k/v_l: (P, page, H, D)
+        h = apply_norm(cfg, lp["ln_attn"], x)
+        q, k_new, v_new = attn_qkv(cfg, lp["attn"], h, q_pos)
+        k_l = k_l.at[write_pages, write_offsets].set(k_new[:, 0])
+        v_l = v_l.at[write_pages, write_offsets].set(v_new[:, 0])
+        o = paged_decode_attention(q[:, 0], k_l, v_l, block_tables, lengths)
+        o = attn_out(lp["attn"], o[:, None])
+        if cfg.post_sublayer_norm:
+            o = apply_norm(cfg, lp["ln_post_attn"], o)
+        x = x + o
+        h2 = apply_norm(cfg, lp["ln_mlp"], x)
+        if cfg.family == "moe":
+            f = _moe_block(cfg, lp, h2, pctx)
+        else:
+            f = mlp(cfg, lp["mlp"], h2, pctx)
+        if cfg.post_sublayer_norm:
+            f = apply_norm(cfg, lp["ln_post_mlp"], f)
+        x = x + f
+        return x, (k_l, v_l)
+
+    x, (ks, vs) = _uscan(body, x, (params["layers"], cache.k, cache.v))
+    x = apply_norm(cfg, params["ln_final"], x)
+    logits = _unembed(cfg, params, x[:, 0])
+    return logits, PagedKVCache(ks, vs)
+
+
+def lm_prefill_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
+                     positions, table, write_pages, write_offsets, *,
+                     pctx: Optional[ParallelCtx] = None):
+    """Chunked prefill of ONE sequence against the page pool.
+
+    tokens/positions: (1, C) — absolute positions; padded lanes sit at
+    ``Np*page - 1`` (the tail of the gathered view, which the table maps to
+    the scratch page). table: (Np,) page ids covering the sequence's lease
+    in token order, scratch-padded, with the LAST entry always scratch.
+    write_pages/write_offsets: (C,) destination of each chunk token's KV.
+
+    The gathered view ``pages[table]`` IS the contiguous context (lease
+    order == token order), so dense ``lm_step`` runs unchanged on it —
+    exact chunked-prefill semantics against previously cached (possibly
+    *shared*) prefix pages — and only the chunk's own KV is scattered back,
+    one (page, offset) per token. Returns (logits (1, C, V), cache).
+    """
+    assert supports_paged(cfg), "paged prefill: unsupported attention variant"
+    page = cache.page_size
+    C = tokens.shape[1]
+    ks = cache.k[:, table]                            # (L, Np, page, H, D)
+    vs = cache.v[:, table]
+    L_, Np = ks.shape[0], ks.shape[1]
+    dense = KVCache(ks.reshape(L_, 1, Np * page, *ks.shape[3:]),
+                    vs.reshape(L_, 1, Np * page, *vs.shape[3:]))
+    logits, sub = lm_step(cfg, params, dense, tokens, positions, pctx=pctx)
+    start = positions[0, 0]
+    k_chunk = jax.lax.dynamic_slice_in_dim(sub.k, start, C, axis=2)[:, 0]
+    v_chunk = jax.lax.dynamic_slice_in_dim(sub.v, start, C, axis=2)[:, 0]
+    k = cache.k.at[:, write_pages, write_offsets].set(k_chunk)
+    v = cache.v.at[:, write_pages, write_offsets].set(v_chunk)
+    return logits, PagedKVCache(k, v)
 
 
 # ---------------------------------------------------------------------------
