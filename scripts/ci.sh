@@ -1,13 +1,32 @@
 #!/usr/bin/env bash
-# Minimal CI smoke: tier-1 test suite + kernel entry-point smoke.
+# CI pipeline: hygiene gates, tier-1 test suite, benchmark smokes.
 # Mirrors ROADMAP.md "Tier-1 verify"; runs hermetically (no network,
 # hypothesis optional — tests fall back to tests/_hypo.py).
+#
+# Env knobs (all optional):
+#   PYTEST_JUNIT=path.xml  write a junit report (uploaded as a CI artifact)
+#   PYTEST_MARKS=<expr>    override the default marker expression; set it
+#                          EMPTY for the nightly-style full set:
+#                          PYTEST_MARKS= bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-python -m pytest -x -q
+# hygiene: no tracked bytecode (regression guard for the PR 2 purge — a
+# tracked .pyc shadows its .py at import time and is invisible in review)
+if git ls-files | grep -E '(\.pyc$|(^|/)__pycache__(/|$))'; then
+    echo "ERROR: tracked bytecode files found (listed above)" >&2
+    exit 1
+fi
+
+# fast syntax gate: a SyntaxError fails in seconds, not after the suite
+python -m compileall -q src
+
+python -m pytest -x -q ${PYTEST_JUNIT:+--junitxml="$PYTEST_JUNIT"} \
+    ${PYTEST_MARKS+-m "$PYTEST_MARKS"}
+
 python benchmarks/kernel_bench.py --dry
 python benchmarks/kvcache_bench.py --dry
 python benchmarks/paged_runner_bench.py --dry
+python benchmarks/swap_stream_bench.py --dry

@@ -66,6 +66,11 @@ class OpportunisticCoScheduler:
         # PCIe (private blocks only; radix-shared prefix stays on device).
         # None => whole-context pricing (pre-paged swapper semantics).
         self.swap_tokens: Optional[Callable] = None
+        # async swap stream: when the backend prefetches H2D swap-ins on a
+        # background worker, the restore overlaps the other sessions'
+        # compute and stops serializing a GPU tick — only the priced
+        # DMA/PCIe occupancy share of the transfer remains a cost.
+        self.swap_in_overlapped: bool = False
 
     # --- chunk shrinking ------------------------------------------------------
     def shrink_chunk(self, want_tokens: int, free_blocks: int) -> int:
@@ -137,7 +142,11 @@ class OpportunisticCoScheduler:
         moved = (self.swap_tokens(s) if self.swap_tokens is not None
                  else s.resident_len)
         t_swap = self.swap_seconds(moved)
-        benefit = self.recompute_time(s.resident_len) - t_swap
+        # serialized swapper: the restore blocks a GPU tick for t_swap.
+        # async stream: the H2D prefetch overlaps other sessions' compute,
+        # so no GPU time is lost to the restore itself.
+        serialized = 0.0 if self.swap_in_overlapped else t_swap
+        benefit = self.recompute_time(s.resident_len) - serialized
         return benefit - self.cfg.offload_price * t_swap
 
     def retention_decision(self, s: Session, now: float) -> KVAction:

@@ -45,14 +45,19 @@ class Policy:
         self.oracle = oracle
         self.host_tier = None          # bound by the engine when tiered
         self.swap_size_fn = None       # session -> (tokens, blocks) moved
+        self.async_swap = False        # backend runs a background swap stream
 
-    def bind_services(self, host_tier=None, swap_size_fn=None) -> None:
+    def bind_services(self, host_tier=None, swap_size_fn=None,
+                      async_swap=False) -> None:
         """Engine-owned KV services handed to the policy after
-        construction: the host-DRAM tier, and the per-block offload sizing
+        construction: the host-DRAM tier, the per-block offload sizing
         (what would *actually* cross PCIe — radix-shared blocks stay on
-        device). Baselines ignore them."""
+        device), and whether the backend runs an async swap stream (swap-in
+        prefetch overlaps other sessions' compute, so restores stop
+        serializing GPU ticks). Baselines ignore them."""
         self.host_tier = host_tier
         self.swap_size_fn = swap_size_fn
+        self.async_swap = async_swap
 
     # --- admission (external) ----------------------------------------------
     def admit(self, queue: List[Session], now: float) -> List[Session]:
@@ -196,13 +201,17 @@ class MARSPolicy(Policy):
         if self.cfg.disable_coscheduler:
             self.name = "mars-no-cosched"
 
-    def bind_services(self, host_tier=None, swap_size_fn=None) -> None:
-        super().bind_services(host_tier, swap_size_fn)
+    def bind_services(self, host_tier=None, swap_size_fn=None,
+                      async_swap=False) -> None:
+        super().bind_services(host_tier, swap_size_fn, async_swap)
         self.cosched.swap_seconds = \
             host_tier.swap_seconds if host_tier is not None else None
         # price the PCIe leg by what per-block offload actually moves
         self.cosched.swap_tokens = \
             (lambda s: swap_size_fn(s)[0]) if swap_size_fn else None
+        # async stream: prefetched swap-ins overlap other sessions'
+        # compute, so the restore no longer serializes a GPU tick
+        self.cosched.swap_in_overlapped = bool(async_swap)
 
     def _host_can_take(self, s: Session) -> bool:
         if self.host_tier is None:

@@ -29,6 +29,12 @@ class BatchWork:
     a physical backend executes placement straight from these and never
     re-derives it from the pool (whose state may already have moved on,
     e.g. swap-out releases the lease before the bytes are copied off).
+
+    ``swap_futures`` is the swap-completion handshake: an async backend
+    fills it during ``run_batch`` with the transfer future of each swap-out
+    it launched on its background stream (sid -> future), and the engine
+    attaches those to the host tier right after the batch returns so
+    ``HostTier.ready`` gates restores on the real drain, not the model.
     """
     decodes: List[Tuple[Session, int]]        # (session, n_tokens this quantum)
     prefills: List[Tuple[Session, int]]       # (session, chunk_tokens)
@@ -36,6 +42,7 @@ class BatchWork:
     swapouts: List[Tuple[Session, int]] = None  # (session, tokens offloaded)
     leases: Dict[int, Tuple[int, ...]] = None   # sid -> block table snapshot
     cow_copies: List[Tuple[int, int, int]] = None  # (sid, src, dst) in order
+    swap_futures: Dict[int, object] = None      # sid -> TransferFuture (D2H)
 
     def __post_init__(self):
         if self.swapouts is None:
@@ -44,6 +51,8 @@ class BatchWork:
             self.leases = {}
         if self.cow_copies is None:
             self.cow_copies = []
+        if self.swap_futures is None:
+            self.swap_futures = {}
 
     @property
     def empty(self) -> bool:

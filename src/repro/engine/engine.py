@@ -89,10 +89,18 @@ class Engine:
                      block_size=cfg.block_size)
             if host_blocks > 0 else None)
         self.telem = Telemetry(cfg.telem, self.bus)
+        # async swap stream: the backend drains swap-outs and prefetches
+        # swap-ins on a background worker; the engine then gates restores
+        # on real transfer futures and defers (never stalls on) sessions
+        # whose swap-in is still in flight. Sim backends stay on the
+        # modeled clock — their behaviour is bit-identical.
+        self._async_swap = bool(getattr(backend, "supports_async_swap",
+                                        False))
         self.policy: Policy = make_policy(policy_name, self.telem, self.bus,
                                           backend, mars_cfg)
         self.policy.bind_services(host_tier=self.host,
-                                  swap_size_fn=self._private_swap_size)
+                                  swap_size_fn=self._private_swap_size,
+                                  async_swap=self._async_swap)
         self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
         self.waiting: List[Session] = []
         self.active: List[Session] = []
@@ -234,6 +242,12 @@ class Engine:
         # 5-6. batch formation + execution
         work = self._form_batch(now)
         elapsed = self.backend.run_batch(work, now)
+        # swap-completion handshake: bind the D2H drains the backend just
+        # launched to their tier entries — from here on, ready() answers
+        # from the real transfer, not the modeled completion time
+        if self.host is not None and work.swap_futures:
+            for sid, fut in work.swap_futures.items():
+                self.host.attach_future(sid, fut)
         # 7. bookkeeping
         if not work.empty:
             self._apply(work, now, now + elapsed, elapsed)
@@ -384,6 +398,11 @@ class Engine:
         if not self.host.can_store(host_blocks):
             return False
         self.host.store(s.sid, host_tokens, host_blocks, now)
+        if self._async_swap:
+            # the D2H drain is launched by run_batch next tick; until its
+            # future is attached the entry must not look restorable (the
+            # modeled ready_at may pass while nothing has been copied)
+            self.host.mark_in_flight(s.sid)
         s.meta["swapped_len"] = s.resident_len
         s.meta["host_tier"] = True
         s.meta["swap_pages"] = rec
@@ -418,7 +437,7 @@ class Engine:
         if s.meta.pop("host_tier", None) and self.host is not None:
             self.host.drop(s.sid)
         for k in ("swap_pages", "restore_positions", "host_blocks",
-                  "host_tokens"):
+                  "host_tokens", "swap_in_future", "swap_cost_s"):
             s.meta.pop(k, None)
         drop = getattr(self.backend, "drop_host", None)
         if drop is not None:
@@ -638,37 +657,85 @@ class Engine:
         n_dec = sum(1 for s in self.active if s.phase == Phase.DECODING)
         return max(self.blocks.total // 100, 2 * n_dec)
 
+    def _stamp_swap_cost(self, s: Session, toks: int) -> None:
+        """``meta["swap_cost_s"]`` accounting, future-aware: the engineered-
+        DMA restore time covers the private suffix only (shared prefix
+        blocks were re-referenced on device, no PCIe traffic). When the
+        async stream already crossed that suffix in the background (the
+        swap-in future resolved before the session was batched, or there
+        was nothing private to move), the restore serializes *nothing* —
+        the stamp is 0.0. Sim path: no futures, modeled cost, bit-identical
+        to the serialized-era accounting."""
+        fut = s.meta.pop("swap_in_future", None)
+        if self._async_swap and (fut is None or fut.done()):
+            s.meta["swap_cost_s"] = 0.0
+        else:
+            s.meta["swap_cost_s"] = self.host.swap_seconds(
+                s.meta.get("host_tokens", toks))
+
+    def _abandon_swap(self, s: Session) -> None:
+        """Give up on a swapped-out session's host copy (stale certificate
+        or capacity deadlock): rebuild by recompute."""
+        self._drop_host_copy(s)
+        s.kv_state = KVState.NONE
+        s.meta["swapped_len"] = 0
+
+    def _swap_in_blocked(self, s: Session, now: float) -> bool:
+        """Async swap stream: is this tiered session's restore still gated?
+        Issues the H2D prefetch on first call (the crossing then overlaps
+        this tick's other sessions' compute) and answers True while the
+        prefetch future is unresolved — the engine *defers* the session,
+        it never stalls the batch on the transfer. Applies the (bid, gen)
+        certificate check first: a record that went stale while in flight
+        falls back to recompute immediately (not blocked, not restorable —
+        the caller re-checks ``kv_state``)."""
+        rec = s.meta.get("swap_pages") or []
+        if not self.blocks.certify(
+                [(bid, gen) for bid, gen, private in rec if not private]):
+            # a shared block was CoW'd / evicted / re-leased while the
+            # transfer was in flight: the certificate is void before any
+            # pages were touched — discard the prefetch with the host copy
+            self._abandon_swap(s)
+            return False
+        if "swap_in_future" not in s.meta:
+            fut = self.backend.prefetch_swap_in(s.sid)
+            s.meta["swap_in_future"] = fut
+            if fut is not None:
+                return True            # H2D launched: deferred, not stalled
+        fut = s.meta["swap_in_future"]
+        return fut is not None and not fut.done()
+
     def _try_prefill(self, s: Session, now: float, in_batch: Set[int],
                      budget: int, prefills, swapins, allow_preempt: bool) -> bool:
         c = self.cfg
         reserve = 0 if allow_preempt else self._watermark()
         avail = max(0, self.blocks.free - reserve)
         if s.kv_state == KVState.SWAPPED:
+            tiered = bool(s.meta.get("host_tier")) and self.host is not None
+            if tiered and not self.host.ready(s.sid, now):
+                # swap-out still in flight: a modeled entry completes at a
+                # known future time (exported via next_timer_event), a
+                # future-gated one resolves on the background stream —
+                # waiting is strictly cheaper than abandoning to recompute
+                return False
+            if tiered and self._async_swap and self._swap_in_blocked(s, now):
+                return False
+        if s.kv_state == KVState.SWAPPED:   # may have fallen to recompute
             toks = s.meta.get("swapped_len", 0)
             tiered = bool(s.meta.get("host_tier")) and self.host is not None
             need = self.blocks.blocks_for(toks)
-            if tiered and not self.host.ready(s.sid, now):
-                # transfer still in flight: it completes at a known future
-                # time (exported via next_timer_event), so waiting is both
-                # live and strictly cheaper than abandoning to recompute
-                return False
             if need <= avail or self._ensure_blocks(
                     need + reserve, now, in_batch, s, allow_preempt):
                 if self._restore_lease(s):
-                    if tiered:       # engineered-DMA restore time for the
-                        # private suffix only — shared prefix blocks were
-                        # re-referenced on device, no PCIe traffic
-                        s.meta["swap_cost_s"] = self.host.swap_seconds(
-                            s.meta.get("host_tokens", toks))
+                    if tiered:
+                        self._stamp_swap_cost(s, toks)
                     swapins.append((s, toks))
                     in_batch.add(s.sid)
                     return True
                 # a shared block recorded at swap-out lost its content
                 # (cache-evicted / rewritten): the restore certificate is
                 # void — abandon the host copy and rebuild by recompute
-                self._drop_host_copy(s)
-                s.kv_state = KVState.NONE
-                s.meta["swapped_len"] = 0
+                self._abandon_swap(s)
             elif not allow_preempt:
                 return False
             else:
@@ -676,9 +743,7 @@ class Engine:
                 # nothing else schedulable — no timer will fix that, so
                 # abandon the host copy and rebuild by recompute (deadlock
                 # freedom).
-                self._drop_host_copy(s)
-                s.kv_state = KVState.NONE
-                s.meta["swapped_len"] = 0
+                self._abandon_swap(s)
         want = min(s.pending_prefill, budget)
         if want <= 0:
             return False
@@ -711,7 +776,8 @@ class Engine:
             s.kv_state = KVState.RESIDENT
             s.meta["swapped_len"] = 0
             for k in ("swap_pages", "restore_positions", "host_blocks",
-                      "host_tokens"):        # consumed by run_batch above
+                      "host_tokens", "swap_in_future",
+                      "swap_cost_s"):        # consumed by run_batch above
                 s.meta.pop(k, None)
             if s.meta.pop("host_tier", None) and self.host is not None:
                 self.host.load(s.sid, end)       # tier hit: occupancy freed

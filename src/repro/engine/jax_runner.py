@@ -32,6 +32,7 @@ model.
 """
 from __future__ import annotations
 
+import threading
 import time
 import zlib
 from typing import Dict, List, Optional, Tuple
@@ -43,6 +44,8 @@ import numpy as np
 from repro.core.session import Session
 from repro.engine.backend import BatchWork
 from repro.kvcache.pool import DeviceBindingMap
+from repro.kvcache.swap_stream import (SwapStream, TransferFuture,
+                                       resolved_future)
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
 from repro.models.transformer import (KVCache, PagedKVCache, lm_decode_paged,
@@ -63,7 +66,7 @@ class JaxBackend:
     def __init__(self, cfg: ModelConfig, *, layout: str = "paged",
                  max_slots: int = 8, max_len: int = 1024,
                  total_pages: Optional[int] = None, page_size: int = 32,
-                 seed: int = 0, dtype=jnp.float32):
+                 seed: int = 0, dtype=jnp.float32, async_swap: bool = True):
         assert cfg.family in ("dense", "moe"), "live runner serves LM families"
         assert layout in ("paged", "dense")
         if layout == "paged" and not supports_paged(cfg):
@@ -78,7 +81,8 @@ class JaxBackend:
             if total_pages is None:
                 total_pages = max(1, max_slots * max_len // page_size)
             self._impl: "_CacheLayout" = _PagedLayout(self, total_pages,
-                                                      page_size)
+                                                      page_size,
+                                                      async_swap=async_swap)
         else:
             self._impl = _DenseLayout(self)
         # prefix sharing needs placement to follow block ids physically;
@@ -86,6 +90,11 @@ class JaxBackend:
         # full prefix hit must still leave >= 1 token to compute
         self.supports_prefix_sharing = (layout == "paged")
         self.requires_last_token_compute = (layout == "paged")
+        # async swap stream: D2H drains and H2D prefetches run on a
+        # background worker; the engine gates restores on transfer futures
+        # and defers sessions whose swap-in is unresolved (dense stays
+        # synchronous — it is the serialized parity baseline)
+        self.supports_async_swap = (layout == "paged" and async_swap)
         self._impl.calibrate()
 
     # --- engine binding ---------------------------------------------------
@@ -100,6 +109,18 @@ class JaxBackend:
 
     def drop_host(self, sid: int) -> None:
         self._impl.drop_host(sid)
+
+    def prefetch_swap_in(self, sid: int) -> Optional[TransferFuture]:
+        """Launch the H2D crossing of ``sid``'s private host blocks on the
+        background stream (None when nothing private was offloaded). The
+        engine defers the session until the returned future resolves, so
+        the transfer overlaps the other sessions' compute."""
+        return self._impl.prefetch_swap_in(sid)
+
+    def close(self) -> None:
+        """Stop the background swap stream (benchmarks create several
+        backends per process; daemon threads would otherwise pile up)."""
+        self._impl.close()
 
     # --- oracle (calibrated) ----------------------------------------------
     def _time_once(self, fn) -> float:
@@ -130,9 +151,14 @@ class JaxBackend:
         # device-write ordering within a tick: D2H reads of swapped-out
         # pages first (their ids may be re-leased to this very batch), then
         # CoW page copies (their sources may be about to be overwritten),
-        # then H2D restores, then compute writes
+        # then H2D restores, then compute writes. With the async stream the
+        # D2H *snapshot* still happens here, in dispatch order (that is
+        # what keeps re-leased page ids safe); only the host crossing moves
+        # to the worker, and its future joins the swap-completion handshake
         for s, _toks in work.swapouts:
-            impl.swap_out(s)
+            fut = impl.swap_out(s)
+            if fut is not None:
+                work.swap_futures[s.sid] = fut
         impl.apply_cow(work.cow_copies)
         for s, _toks in work.swapins:
             impl.swap_in(s, work.leases.get(s.sid, ()))
@@ -174,24 +200,41 @@ class JaxBackend:
 # ---------------------------------------------------------------------------
 
 class _CacheLayout:
-    """Physical KV placement strategy: prefill/decode/swap/CoW execution."""
+    """Physical KV placement strategy: prefill/decode/swap/CoW execution.
+
+    ``swap_out`` may return the transfer future of an asynchronously
+    launched D2H drain (None == completed synchronously); ``prefetch_swap_in``
+    launches the H2D crossing ahead of the restore (None == nothing private
+    to move)."""
 
     def bind_kv_pool(self, pool) -> None: ...
     def calibrate(self) -> None: ...
     def kv_bytes_per_token(self) -> float: ...
     def release_session(self, sid: int) -> None: ...
     def drop_host(self, sid: int) -> None: ...
-    def swap_out(self, s: Session) -> None: ...
+    def swap_out(self, s: Session) -> Optional[TransferFuture]: ...
     def swap_in(self, s: Session, lease) -> None: ...
+    def prefetch_swap_in(self, sid: int) -> Optional[TransferFuture]:
+        return None
     def apply_cow(self, copies) -> None: ...
     def prefill(self, s: Session, chunk: int, lease) -> None: ...
     def decodes(self, decodes, leases) -> None: ...
+    def close(self) -> None: ...
 
 
 class _PagedLayout(_CacheLayout):
-    """Global page pool driven by BlockPool block tables."""
+    """Global page pool driven by BlockPool block tables.
 
-    def __init__(self, backend: JaxBackend, total_pages: int, page: int):
+    With ``async_swap`` (default) the host crossings run on a background
+    :class:`SwapStream`: ``swap_out`` gathers the private pages into a
+    device-side staging snapshot (in dispatch order — safe against this
+    very tick re-leasing the ids) and hands the D2H drain to the worker;
+    ``prefetch_swap_in`` uploads the host copy to standalone device buffers
+    ahead of the restore, so ``swap_in`` only pays a device-side scatter.
+    """
+
+    def __init__(self, backend: JaxBackend, total_pages: int, page: int,
+                 async_swap: bool = True):
         self.b = backend
         self.page = page
         self.total_pages = total_pages
@@ -202,6 +245,18 @@ class _PagedLayout(_CacheLayout):
         # host copies of offloaded private blocks:
         # sid -> (k (L, n, page, Hkv, D), v (...)) in swap-record order
         self._host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.stream: Optional[SwapStream] = (SwapStream(n_buffers=2)
+                                             if async_swap else None)
+        # async state, all guarded by _mu: in-flight D2H futures (drained
+        # by a same-tick swap_in), prefetched device buffers, and the sids
+        # whose host state was dropped while a transfer was in flight (the
+        # straggler job must not resurrect them). FIFO on the stream keeps
+        # a drop -> re-offload sequence correct: the stale drain lands
+        # before the fresh one.
+        self._mu = threading.Lock()
+        self._d2h: Dict[int, TransferFuture] = {}
+        self._prefetch: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+        self._dropped: set = set()
 
         def _decode(params, cache, tokens, positions, tables, lengths,
                     wpid, woff):
@@ -289,39 +344,138 @@ class _PagedLayout(_CacheLayout):
         pass                         # placement is the engine's lease state
 
     def drop_host(self, sid: int) -> None:
-        self._host.pop(sid, None)
+        with self._mu:
+            self._host.pop(sid, None)
+            self._prefetch.pop(sid, None)
+            self._d2h.pop(sid, None)
+            if self.stream is not None:
+                self._dropped.add(sid)   # in-flight jobs must not resurrect
+
+    def close(self) -> None:
+        if self.stream is not None:
+            self.stream.close()
 
     # --- swap: per-block host offload -------------------------------------
-    def swap_out(self, s: Session) -> None:
+    def swap_out(self, s: Session) -> Optional[TransferFuture]:
         """D2H-copy only the blocks flagged private in the engine's swap
-        record; shared/indexed prefix blocks stay resident on device."""
+        record; shared/indexed prefix blocks stay resident on device. With
+        the stream, the page gather (a device-side snapshot, ordered by
+        dispatch before any later cache writes) happens here and the host
+        crossing drains on the worker; the returned future joins the
+        engine's swap-completion handshake."""
         rec = s.meta.get("swap_pages")
         if rec is None:
-            return
+            return None
+        sid = s.sid
         pids = [self.binding.page_of(bid) for bid, _gen, private in rec
                 if private]
         if not pids:
-            self._host[s.sid] = (None, None)
-            return
-        idx = np.asarray(pids, np.int32)
-        self._host[s.sid] = (jax.device_get(self.cache.k[:, idx]),
-                             jax.device_get(self.cache.v[:, idx]))
+            if self.stream is None:
+                self._host[sid] = (None, None)
+                return None
+
+            def mark_empty():
+                # through the FIFO, not inline: a stale drain for this sid
+                # still queued from a dropped earlier offload must land
+                # (and be discarded) before the guard is disarmed
+                with self._mu:
+                    self._dropped.discard(sid)
+                    self._host[sid] = (None, None)
+
+            return self.stream.submit(mark_empty, sid=sid, direction="d2h")
+        # pad the gather to a power-of-two page count with the scratch page
+        # (whose content is garbage by design): swap records grow a little
+        # every round, and an unbucketed gather/scatter would XLA-compile a
+        # fresh shape per round — in the tick, on the critical path
+        idx = self._swap_index(pids)
+        if self.stream is None:
+            self._host[sid] = (jax.device_get(self.cache.k[:, idx]),
+                               jax.device_get(self.cache.v[:, idx]))
+            return None
+        slot = self.stream.staging.acquire()     # double-buffer backpressure
+        k_snap = self.cache.k[:, idx]            # device-side staging gather
+        v_snap = self.cache.v[:, idx]
+        with self._mu:
+            self._dropped.discard(sid)
+
+        def drain():
+            try:
+                host = (np.asarray(k_snap), np.asarray(v_snap))
+                with self._mu:
+                    if sid not in self._dropped:
+                        self._host[sid] = host
+                return host
+            finally:
+                self.stream.staging.release(slot)
+
+        fut = self.stream.submit(drain, sid=sid, direction="d2h")
+        with self._mu:
+            self._d2h[sid] = fut
+        return fut
+
+    def prefetch_swap_in(self, sid: int) -> Optional[TransferFuture]:
+        """Upload ``sid``'s private host blocks to standalone device
+        buffers on the worker; the later ``swap_in`` then scatters them
+        into the freshly leased pages device-side. Only callable once the
+        D2H drain resolved (``HostTier.ready`` gates the engine)."""
+        with self._mu:
+            host = self._host.get(sid)
+        if self.stream is None or host is None or host[0] is None:
+            return None
+        # slot acquired on the submitting thread (both directions): every
+        # slot holder is then a job already in the FIFO ahead of any
+        # waiter, so the worker never blocks on a slot it must itself free
+        slot = self.stream.staging.acquire()
+
+        def upload():
+            try:
+                dk = jax.device_put(host[0])
+                dv = jax.device_put(host[1])
+                dk.block_until_ready()
+                dv.block_until_ready()
+                with self._mu:
+                    if sid not in self._dropped:
+                        self._prefetch[sid] = (dk, dv)
+                return (dk, dv)
+            finally:
+                self.stream.staging.release(slot)
+
+        return self.stream.submit(upload, sid=sid, direction="h2d")
 
     def swap_in(self, s: Session, lease) -> None:
-        """H2D-restore private blocks into the freshly allocated pages at
+        """Restore private blocks into the freshly allocated pages at
         ``meta["restore_positions"]``; reacquired shared blocks need no
-        transfer — their pages were never rewritten (gen-certified)."""
-        host = self._host.pop(s.sid, None)
+        transfer — their pages were never rewritten (gen-certified). A
+        prefetched restore scatters device-resident buffers; otherwise the
+        H2D upload happens inline (after waiting out a same-tick D2H)."""
+        sid = s.sid
+        with self._mu:
+            d2h = self._d2h.pop(sid, None)
+        if d2h is not None and not d2h.done():
+            d2h.result()      # same-tick out->in: restore behind the drain
+        with self._mu:
+            pre = self._prefetch.pop(sid, None)
+            host = self._host.pop(sid, None)
         if host is None or host[0] is None:
             return
         restore = s.meta.get("restore_positions", [])
         pids = [self.binding.page_of(lease[i]) for i in restore]
-        assert len(pids) == host[0].shape[1], \
+        assert _bucket(len(pids), lo=2) == host[0].shape[1], \
             f"restore mismatch: {len(pids)} pages, {host[0].shape[1]} copies"
-        idx = np.asarray(pids, np.int32)
-        self.cache = PagedKVCache(
-            self.cache.k.at[:, idx].set(jnp.asarray(host[0])),
-            self.cache.v.at[:, idx].set(jnp.asarray(host[1])))
+        # scatter through the same scratch-padded bucket the drain gathered
+        # (pad lanes dump their garbage back onto the scratch page)
+        idx = self._swap_index(pids)
+        dk, dv = pre if pre is not None else (jnp.asarray(host[0]),
+                                              jnp.asarray(host[1]))
+        self.cache = PagedKVCache(self.cache.k.at[:, idx].set(dk),
+                                  self.cache.v.at[:, idx].set(dv))
+
+    def _swap_index(self, pids: List[int]) -> np.ndarray:
+        """Swap gather/scatter page index, padded to a power-of-two width
+        with the scratch page so the eager ops compile O(log) shapes."""
+        out = np.full((_bucket(len(pids), lo=2),), self.scratch, np.int32)
+        out[:len(pids)] = pids
+        return out
 
     def apply_cow(self, copies) -> None:
         """Mirror the tick's copy-on-write events as device page copies, in

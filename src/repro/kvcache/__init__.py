@@ -1,17 +1,23 @@
 """Tiered KV-state subsystem.
 
-Three layers that together replace the counter-only block manager:
+Four layers that together replace the counter-only block manager:
 
-* ``pool``      — block-identity pool: per-block refcounts, copy-on-write,
-                  radix-cached (evictable) blocks, per-session leases.
-* ``radix``     — prefix index over hashed token chunks: sessions sharing a
-                  repository context share physical KV blocks.
-* ``host_tier`` — host-DRAM offload tier with a PCIe-bandwidth cost model;
-                  the third retention outcome (PIN / OFFLOAD / DROP).
+* ``pool``        — block-identity pool: per-block refcounts, copy-on-write,
+                    radix-cached (evictable) blocks, per-session leases.
+* ``radix``       — prefix index over hashed token chunks: sessions sharing a
+                    repository context share physical KV blocks.
+* ``host_tier``   — host-DRAM offload tier with a PCIe-bandwidth cost model;
+                    the third retention outcome (PIN / OFFLOAD / DROP).
+* ``swap_stream`` — background worker + double-buffered staging that moves
+                    the tier's D2H/H2D page copies off the engine's critical
+                    path; ``HostTier.ready`` gates on its transfer futures.
 """
 from repro.kvcache.host_tier import HostTier, HostTierConfig
 from repro.kvcache.pool import BlockPool, DeviceBindingMap, TieredPoolProbe
 from repro.kvcache.radix import RadixIndex
+from repro.kvcache.swap_stream import (StagingBuffers, SwapStream,
+                                       TransferFuture, resolved_future)
 
 __all__ = ["BlockPool", "DeviceBindingMap", "TieredPoolProbe", "RadixIndex",
-           "HostTier", "HostTierConfig"]
+           "HostTier", "HostTierConfig", "SwapStream", "StagingBuffers",
+           "TransferFuture", "resolved_future"]

@@ -5,15 +5,22 @@ model. Unlike the legacy swap path (InferCept's stock-vLLM swapper: per-
 layer-per-block scattered DMAs, ~3 GB/s effective, serialized with the
 engine step), this tier models an engineered batched-DMA path:
 
-* swap-OUT is asynchronous — the copy overlaps tool execution on the DMA
-  engine; the entry only becomes *restorable* once the transfer completes
-  (``ready_at`` on the sim clock);
-* swap-IN is synchronous — decode needs the KV, so restore time serializes
-  with the engine step (the execution backend charges
-  ``meta["swap_cost_s"]``).
+* swap-OUT is asynchronous — the copy overlaps tool execution (and, on the
+  live path, the other sessions' compute via the background swap stream);
+  the entry only becomes *restorable* once the transfer completes. How
+  completion is observed depends on the path: the sim keeps the cost model
+  as its "future" (``ready_at`` on the sim clock), while the live runner
+  attaches the real :class:`~repro.kvcache.swap_stream.TransferFuture` of
+  the D2H drain and ``ready`` gates on that instead of the modeled time;
+* swap-IN serializes only when it must: the sim charges the engineered
+  restore time via ``meta["swap_cost_s"]``, and the live paged runner
+  *prefetches* the H2D crossing on the swap stream so a restore whose
+  future already resolved charges nothing (the engine stamps
+  ``meta["swap_cost_s"] = 0.0`` for it).
 
 On the live ``jax_runner`` path the same BatchWork swap entries are executed
-with real ``jax.device_get`` / ``jax.device_put`` of the slot's cache region.
+with real ``jax.device_get`` / ``jax.device_put`` of the per-block page
+regions, on the background stream when the backend runs one.
 """
 from __future__ import annotations
 
@@ -28,11 +35,27 @@ class HostTierConfig:
     base_latency_s: float = 5e-4   # per-transfer setup
 
 
+class _InFlight:
+    """Sentinel "future" for a swap-out whose real transfer future has not
+    been attached yet (the backend creates it inside ``run_batch``, one
+    tick after the engine registers the entry): never done, so ``ready``
+    cannot fall back to the modeled clock and restore pages that were
+    never drained."""
+
+    @staticmethod
+    def done() -> bool:
+        return False
+
+
+IN_FLIGHT = _InFlight()
+
+
 @dataclass
 class _Entry:
     tokens: int
     blocks: int
-    ready_at: float
+    ready_at: float                # modeled completion (the sim's "future")
+    future: Optional[object] = None  # real transfer future (live path)
 
 
 class HostTier:
@@ -73,8 +96,10 @@ class HostTier:
 
     # --- lifecycle -----------------------------------------------------
     def store(self, sid: int, tokens: int, blocks: int, now: float) -> float:
-        """Register an offload; returns transfer seconds (DMA overlaps the
-        tool phase; the entry is restorable from ``now + seconds``)."""
+        """Register an offload; returns modeled transfer seconds. The entry
+        starts on the modeled "future" (restorable from ``now + seconds``
+        on the sim clock); a live backend replaces that with the real
+        transfer future via ``mark_in_flight``/``attach_future``."""
         assert sid not in self._entries, f"double offload of sid {sid}"
         sec = self.swap_seconds(tokens)
         self._entries[sid] = _Entry(tokens, blocks, now + sec)
@@ -83,9 +108,47 @@ class HostTier:
         self.bytes_moved += tokens * self.bytes_per_token
         return sec
 
-    def ready(self, sid: int, now: float) -> bool:
+    def mark_in_flight(self, sid: int) -> None:
+        """Async backends: gate ``ready`` on a real transfer future from
+        the moment of registration. Until ``attach_future`` delivers one,
+        the entry is never ready (the D2H drain has not even started)."""
         e = self._entries.get(sid)
-        return e is not None and now >= e.ready_at
+        if e is not None:
+            e.future = IN_FLIGHT
+
+    def attach_future(self, sid: int, future) -> None:
+        """Swap-completion handshake: bind the backend's real transfer
+        future (created inside ``run_batch``) to the entry. Tolerates a
+        missing entry — the session may have been detached or dropped to
+        recompute between batch formation and execution."""
+        e = self._entries.get(sid)
+        if e is not None and future is not None:
+            e.future = future
+
+    def ready(self, sid: int, now: float) -> bool:
+        """Restorable? Future-gated entries answer from the *real* transfer
+        (done == the bytes are in host memory); modeled entries answer from
+        the sim clock (``now >= ready_at``) — the cost model is the sim
+        path's future, bit-identical to the pre-stream behaviour."""
+        e = self._entries.get(sid)
+        if e is None:
+            return False
+        if e.future is not None:
+            return e.future.done()
+        return now >= e.ready_at
+
+    def time_to_ready(self, sid: int, now: float) -> Optional[float]:
+        """Seconds until the swap-out transfer makes ``sid`` restorable.
+        Modeled entries answer exactly ``max(0, ready_at - now)``; future-
+        gated entries answer 0.0 once the transfer resolved and None while
+        it is in flight (the wall clock, not the model, decides). None for
+        unknown sids."""
+        e = self._entries.get(sid)
+        if e is None:
+            return None
+        if e.future is not None:
+            return 0.0 if e.future.done() else None
+        return max(0.0, e.ready_at - now)
 
     def load(self, sid: int, now: float) -> int:
         """Swap-in completed: release host capacity, count the hit."""
@@ -103,9 +166,12 @@ class HostTier:
             self.drops += 1
 
     def next_event_time(self, now: float) -> Optional[float]:
-        """Earliest in-flight transfer completion after ``now`` — the sim
-        driver must not jump the clock past it while a restore is gated."""
-        ts = [e.ready_at for e in self._entries.values() if e.ready_at > now]
+        """Earliest in-flight *modeled* transfer completion after ``now`` —
+        the sim driver must not jump the clock past it while a restore is
+        gated. Future-gated entries resolve on the wall clock, not the sim
+        clock, so they are not timer events."""
+        ts = [e.ready_at for e in self._entries.values()
+              if e.future is None and e.ready_at > now]
         return min(ts) if ts else None
 
     @property

@@ -138,6 +138,16 @@ class BlockPool:
         """Content generation of ``bid`` (see class docstring)."""
         return self._gen[bid]
 
+    def certify(self, pairs: Sequence[Tuple[int, int]]) -> bool:
+        """True iff every (bid, gen) certificate still holds — i.e. no
+        certified page was CoW-replaced, cache-evicted, re-leased, or
+        unindexed since the certificate was recorded (each of those bumps
+        the block's generation). The async swap stream checks this before
+        committing a prefetched restore: a record that went stale while the
+        transfer was in flight must fall back to recompute *before* any
+        pages are touched."""
+        return all(self._gen[bid] == gen for bid, gen in pairs)
+
     def survives_release(self, bid: int) -> bool:
         """True if the block's content outlives one reference drop: another
         session still references it, or the radix index parks it cached.

@@ -124,6 +124,7 @@ def _run_family(layout, sids, *, policy="fcfs", yield_action=None, rounds=1):
     return {s.sid: list(s.meta["generated"]) for s in finished}, eng
 
 
+@pytest.mark.live
 def test_paged_dense_greedy_decode_parity_on_shared_family():
     """The paged backend (prefix sharing ON, shared blocks physically
     shared) must emit exactly the tokens the slot-dense path (every member
@@ -141,6 +142,7 @@ def test_paged_dense_greedy_decode_parity_on_shared_family():
     eng.blocks.check_consistency()
 
 
+@pytest.mark.live
 def test_paged_offload_roundtrip_moves_only_private_blocks():
     """Forced OFFLOAD at every tool yield: per-block offload copies only
     the non-shared suffix over PCIe, restores exactly, and greedy tokens
@@ -179,6 +181,7 @@ def _dup_sessions(sids, *, shared_chunks=3, tail_tokens=16):
     return out
 
 
+@pytest.mark.live
 def test_paged_duplicate_and_cow_tail_parity():
     from repro.engine.jax_runner import JaxBackend
 

@@ -1,0 +1,392 @@
+"""Async swap stream tests: double-buffered staging reuse, future-gated
+``HostTier.ready`` (with the sim-clock path pinned bit-identical), engine
+deferral of unresolved swap-ins, in-flight stale-gen invalidation falling
+back to recompute, and the live paged runner moving real transfers through
+the background worker without changing greedy tokens."""
+import time
+
+import pytest
+
+from repro.core import events as ev
+from repro.core.policies import KVAction
+from repro.core.session import KVState, Phase, Round, make_session
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig, run_sim
+from repro.kvcache import (HostTier, HostTierConfig, SwapStream,
+                           TransferFuture, resolved_future)
+
+from repro.configs.qwen3_coder_30b import CONFIG as QWEN3
+from repro.models.perf_model import H100
+
+
+# ---------------------------------------------------------------------------
+# stream: double-buffered staging + futures
+# ---------------------------------------------------------------------------
+
+def test_staging_double_buffer_reuse():
+    """5 transfers over 2 staging buffers: never more than 2 in flight,
+    both slots recycled, FIFO results intact."""
+    st = SwapStream(n_buffers=2)
+    futs = []
+    for i in range(5):
+        slot = st.staging.acquire()          # backpressures beyond 2
+
+        def job(i=i, slot=slot):
+            try:
+                time.sleep(0.005)
+                return i
+            finally:
+                st.staging.release(slot)
+
+        futs.append(st.submit(job, sid=i, direction="d2h"))
+    assert [f.result(timeout=10) for f in futs] == list(range(5))
+    assert st.staging.acquires == 5
+    assert st.staging.max_in_flight <= 2
+    assert st.staging.reuses == 3            # 5 acquires over 2 buffers
+    assert st.d2h_completed == 5
+    st.close()
+
+
+def test_transfer_future_error_propagates():
+    st = SwapStream()
+    fut = st.submit(lambda: 1 / 0, direction="h2d")
+    with pytest.raises(ZeroDivisionError):
+        fut.result(timeout=10)
+    assert fut.done()
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# host tier: future-gated ready / time_to_ready
+# ---------------------------------------------------------------------------
+
+def _tier():
+    return HostTier(HostTierConfig(capacity_blocks=10, pcie_bw=1e9),
+                    bytes_per_token=1e6, block_size=32)
+
+
+def test_host_tier_sim_clock_bit_identical():
+    """Regression (no futures attached): ``ready`` flips exactly at the
+    modeled ``now + swap_seconds(tokens)`` and ``time_to_ready`` is exactly
+    the modeled remainder — the sim path keeps the cost model as its
+    "future", unchanged by the stream refactor."""
+    ht = _tier()
+    sec = ht.store(1, tokens=100, blocks=4, now=2.0)
+    assert sec == pytest.approx(ht.cfg.base_latency_s + 0.1)
+    assert ht.time_to_ready(1, 2.0) == pytest.approx(sec)
+    assert ht.time_to_ready(1, 2.0 + sec / 2) == pytest.approx(sec / 2)
+    assert not ht.ready(1, 2.0 + 0.999 * sec)
+    assert ht.ready(1, 2.0 + sec)
+    assert ht.time_to_ready(1, 5.0 + sec) == 0.0
+    assert ht.next_event_time(2.0) == pytest.approx(2.0 + sec)
+    assert ht.time_to_ready(99, 0.0) is None
+
+
+def test_transfer_future_gates_host_tier_ready():
+    """Future-gated entries ignore the modeled clock entirely: not ready at
+    any ``now`` until the real transfer resolves, never a sim timer."""
+    ht = _tier()
+    ht.store(5, tokens=100, blocks=4, now=0.0)
+    ht.mark_in_flight(5)
+    assert not ht.ready(5, 1e9)              # modeled time long past
+    assert ht.time_to_ready(5, 1e9) is None  # wall clock decides
+    assert ht.next_event_time(0.0) is None   # not a sim timer event
+    fut = TransferFuture(5, "d2h")
+    ht.attach_future(5, fut)
+    assert not ht.ready(5, 1e9)
+    fut._resolve(None)
+    assert ht.ready(5, 0.0)
+    assert ht.time_to_ready(5, 0.0) == 0.0
+    ht.attach_future(404, resolved_future())  # unknown sid: tolerated no-op
+    assert not ht.ready(404, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine: deferral handshake + stale-gen fallback (stubbed async backend)
+# ---------------------------------------------------------------------------
+
+class _FakeFuture:
+    def __init__(self):
+        self._done = False
+
+    def done(self):
+        return self._done
+
+    def resolve(self):
+        self._done = True
+
+
+class _AsyncStubBackend(SimBackend):
+    """SimBackend wearing the async-swap surface: swap-outs hand the engine
+    controllable fake futures via the BatchWork handshake, prefetch
+    requests are recorded, nothing actually copies."""
+    supports_async_swap = True
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.out_futs = {}
+        self.in_futs = {}
+        self.prefetch_requests = []
+        self.dropped = []
+        self.swapin_costs = []        # (sid, meta["swap_cost_s"]) at restore
+
+    def run_batch(self, work, now):
+        for s, _ in work.swapins:
+            self.swapin_costs.append((s.sid, s.meta.get("swap_cost_s")))
+        for s, _ in work.swapouts:
+            fut = self.out_futs.setdefault(s.sid, _FakeFuture())
+            work.swap_futures[s.sid] = fut
+        return super().run_batch(work, now)
+
+    def prefetch_swap_in(self, sid):
+        self.prefetch_requests.append(sid)
+        return self.in_futs.setdefault(sid, _FakeFuture())
+
+    def drop_host(self, sid):
+        self.dropped.append(sid)
+
+
+def _async_engine(blocks=512, **cfg_kw):
+    backend = _AsyncStubBackend(QWEN3, H100)
+    eng = Engine(EngineConfig(total_kv_blocks=blocks, block_size=32,
+                              token_budget=8192, max_decode_batch=64,
+                              decode_granularity=8, cpu_slots=4, **cfg_kw),
+                 "fcfs", backend)
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    return eng, backend
+
+
+def _tick_until(eng, now, pred, limit=200, dt=0.05):
+    for _ in range(limit):
+        if pred():
+            return now
+        elapsed, _prog = eng.tick(now)
+        now += max(elapsed, dt)
+    raise AssertionError("condition not reached")
+
+
+def test_engine_defers_unresolved_swap_in():
+    """A re-admitted session whose swap transfers have not resolved is
+    deferred (not restored, not stalled on); once both futures resolve the
+    restore executes and charges swap_cost_s = 0 (the crossing overlapped
+    other compute)."""
+    eng, backend = _async_engine()
+    s = make_session(0.0, [Round(4096, 8, "t", 10.0),
+                           Round(64, 8, None, 0.0)],
+                     ideal_time=1.0, sid=77001)
+    eng.submit(s)
+    now = _tick_until(eng, 0.0, lambda: s.phase == Phase.TOOL)
+    assert s.kv_state == KVState.SWAPPED and eng.host.holds(s.sid)
+    # mark_in_flight: never restorable off the modeled clock alone
+    assert not eng.host.ready(s.sid, now + 1e9)
+    # drain the queued swap-out batch -> the real future is attached
+    now = _tick_until(eng, now, lambda: s.sid in backend.out_futs, limit=3)
+    now += 11.0                              # tool long finished
+    for _ in range(3):                       # deferral is stable
+        elapsed, _ = eng.tick(now)
+        now += max(elapsed, 0.05)
+    assert s.phase == Phase.READY_PREFILL    # re-admitted...
+    assert s.kv_state == KVState.SWAPPED     # ...but not restored
+    assert backend.prefetch_requests == []   # D2H unresolved: no prefetch
+    backend.out_futs[s.sid].resolve()
+    elapsed, _ = eng.tick(now)
+    now += max(elapsed, 0.05)
+    assert backend.prefetch_requests == [s.sid]   # H2D launched...
+    assert s.kv_state == KVState.SWAPPED          # ...restore still deferred
+    backend.in_futs[s.sid].resolve()
+    now = _tick_until(eng, now, lambda: s.kv_state == KVState.RESIDENT)
+    assert backend.swapin_costs == [(s.sid, 0.0)]  # overlapped: free restore
+    _tick_until(eng, now, lambda: s.phase == Phase.FINISHED)
+    assert eng.host.hits == 1 and eng.host.used_blocks == 0
+    eng.check_invariants()
+
+
+def test_inflight_stale_gen_falls_back_to_recompute():
+    """Radix-shared blocks recorded in a swap record are gen-certified at
+    restore; evicting them (allocation pressure) while the session's swap
+    transfers are in flight voids the certificate -> the engine abandons
+    the host copy (dropping the prefetch with it) and rebuilds by
+    recompute."""
+    eng, backend = _async_engine(blocks=150)
+    fam = [(("sw7", i), 32) for i in range(64)]
+    a = make_session(0.0, [Round(64 * 32, 8, None, 0.0)],
+                     ideal_time=1.0, sid=78001)
+    a.meta["prefix_hashes"] = list(fam)
+    b = make_session(0.0, [Round(64 * 32 + 1024, 8, "t", 50.0),
+                           Round(64, 8, None, 0.0)],
+                     ideal_time=1.0, sid=78002)
+    b.meta["prefix_hashes"] = fam + [(("u", 78002, i), 32)
+                                     for i in range(32)]
+    eng.submit(a)
+    now = _tick_until(eng, 0.0, lambda: a.phase == Phase.FINISHED)
+    eng.submit(b)
+    now = _tick_until(eng, now, lambda: b.phase == Phase.TOOL)
+    assert b.kv_state == KVState.SWAPPED
+    rec = list(b.meta["swap_pages"])
+    shared = [(bid, gen) for bid, gen, private in rec if not private]
+    assert shared, "B should have recorded radix-shared blocks"
+    assert eng.blocks.certify(shared)
+    # drain the swap-out batch so the transfer is genuinely in flight
+    now = _tick_until(eng, now, lambda: b.sid in backend.out_futs, limit=3)
+    # allocation pressure while in flight: C's prefill digs into the cached
+    # shared blocks, bumping their generations
+    c = make_session(now, [Round(135 * 32, 8, None, 0.0)],
+                     ideal_time=1.0, sid=78003)
+    eng.submit(c)
+    now = _tick_until(eng, now, lambda: c.phase == Phase.FINISHED)
+    assert not eng.blocks.certify(shared)     # certificate void
+    backend.out_futs[b.sid].resolve()
+    if b.sid in backend.in_futs:
+        backend.in_futs[b.sid].resolve()
+    now += 60.0                               # tool over: B tries to restore
+    now = _tick_until(eng, now, lambda: b.phase == Phase.FINISHED, limit=400)
+    assert b.sid in backend.dropped           # prefetch/host copy discarded
+    assert eng.host.drops >= 1 and eng.host.hits == 0
+    assert eng.host.used_blocks == 0
+    # it recomputed: round-1 context was rebuilt, not restored
+    assert any(e.kind == ev.EVICT for e in eng.bus.log)
+    eng.check_invariants()
+
+
+def test_sim_swap_cost_accounting_unchanged():
+    """Regression: without an async backend the engine still stamps the
+    modeled engineered-DMA cost (swap_seconds of the private suffix) on
+    every tiered swap-in — the serialized-era accounting, bit-identical."""
+    costs = []
+
+    class _Spy(SimBackend):
+        def run_batch(self, backend_work, now):
+            for s, _ in backend_work.swapins:
+                costs.append((s.meta.get("swap_cost_s"),
+                              s.meta.get("host_tokens")))
+            return super().run_batch(backend_work, now)
+
+    eng = Engine(EngineConfig(total_kv_blocks=2048, block_size=32,
+                              token_budget=8192, cpu_slots=4),
+                 "fcfs", _Spy(QWEN3, H100))
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    s = make_session(0.0, [Round(20_000, 16, "t", 30.0),
+                           Round(500, 16, None, 0.0)], ideal_time=10.0)
+    finished, _ = run_sim(eng, [s], max_time=1e5)
+    assert len(finished) == 1
+    assert len(costs) == 1
+    cost, host_tokens = costs[0]
+    assert cost == eng.host.swap_seconds(host_tokens)
+    assert cost > 0.0
+    eng.check_invariants()
+
+
+def test_offload_net_prices_overlapped_swap_in():
+    """The co-scheduler stops charging the swap-in as serialized GPU time
+    once the backend overlaps it: offload nets strictly higher."""
+    from repro.core.coscheduler import (CoSchedulerConfig,
+                                        OpportunisticCoScheduler)
+    cs = OpportunisticCoScheduler(CoSchedulerConfig(), telem=None,
+                                  recompute_time_fn=lambda n: 1.0)
+    cs.swap_seconds = lambda n: 0.4
+    s = make_session(0.0, [Round(8192, 8, "t", 5.0)], ideal_time=1.0)
+    s.resident_len = 8192
+    serialized = cs.offload_net(s, 0.0)
+    cs.swap_in_overlapped = True
+    overlapped = cs.offload_net(s, 0.0)
+    assert serialized == pytest.approx(1.0 - 0.4 - 0.5 * 0.4)
+    assert overlapped == pytest.approx(1.0 - 0.5 * 0.4)
+    assert overlapped > serialized
+
+
+# ---------------------------------------------------------------------------
+# live paged runner: real transfers through the stream
+# ---------------------------------------------------------------------------
+
+pytest.importorskip("jax")
+
+
+def _reduced_cfg():
+    from repro.configs.registry import get_config
+    return get_config("llama3.2-1b").reduced()
+
+
+def _run_paged(sids, *, async_swap):
+    from repro.core.events import EventBus
+    from repro.engine.engine import run_live
+    from repro.engine.jax_runner import JaxBackend
+    from repro.engine.tools import RealToolExecutor
+    backend = JaxBackend(_reduced_cfg(), layout="paged", max_slots=4,
+                         max_len=256, async_swap=async_swap)
+    bus = EventBus()
+    tools = RealToolExecutor(cpu_slots=2, bus=bus)
+    eng = Engine(EngineConfig(total_kv_blocks=30, block_size=32,
+                              token_budget=256, max_decode_batch=4,
+                              decode_granularity=4, cpu_slots=2),
+                 "fcfs", backend, bus=bus, tool_exec=tools)
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    fam = [(("lsw", i), 32) for i in range(3)]
+    sessions = []
+    for j, sid in enumerate(sids):
+        s = make_session(0.05 * j, [Round(128, 8, "t", 0.05),
+                                    Round(32, 6, None, 0.0)],
+                         ideal_time=1.0, sid=sid)
+        s.meta["prefix_hashes"] = fam + [(("u", sid, 0), 32)]
+        sessions.append(s)
+    finished, _ = run_live(eng, sessions, timeout=120)
+    tools.shutdown()
+    eng.check_invariants()
+    out = {s.sid: list(s.meta["generated"]) for s in finished}
+    stream = backend._impl.stream
+    backend.close()
+    return out, eng, stream
+
+
+@pytest.mark.live
+def test_paged_async_stream_moves_real_transfers():
+    """Forced OFFLOAD on the live paged runner with the stream enabled:
+    transfers really flow through the worker (D2H drains + H2D prefetches,
+    bounded staging), the tier pairs its stores/hits, and greedy tokens are
+    identical to the serialized paged path."""
+    sids = [95001, 95002]
+    sync_out, _, none_stream = _run_paged(sids, async_swap=False)
+    assert none_stream is None
+    async_out, eng, stream = _run_paged(sids, async_swap=True)
+    assert async_out == sync_out and set(async_out) == set(sids)
+    assert stream.d2h_completed >= 1          # drains ran in background
+    assert stream.h2d_completed >= 1          # restores were prefetched
+    assert stream.d2h_submitted == stream.d2h_completed
+    assert stream.h2d_submitted == stream.h2d_completed
+    assert stream.staging.max_in_flight <= 2
+    assert eng.host.used_blocks == 0 and eng.host.hits >= 1
+    outs = [e for e in eng.bus.log if e.kind == ev.SWAP_OUT
+            and e.data.get("tier") == "host"]
+    ins = [e for e in eng.bus.log if e.kind == ev.SWAP_IN
+           and e.data.get("tier") == "host"]
+    assert len(outs) == len(ins) >= 1
+    eng.blocks.check_consistency()
+
+
+@pytest.mark.live
+@pytest.mark.slow
+def test_paged_async_stream_soak():
+    """Soak: a wider family over more tool rounds keeps the stream, pool
+    and tier invariant-clean (nightly set only)."""
+    from repro.engine.engine import run_live
+    from repro.engine.jax_runner import JaxBackend
+    backend = JaxBackend(_reduced_cfg(), layout="paged", max_slots=6,
+                         max_len=512, async_swap=True)
+    eng = Engine(EngineConfig(total_kv_blocks=90, block_size=32,
+                              token_budget=512, max_decode_batch=6,
+                              decode_granularity=4, cpu_slots=4),
+                 "fcfs", backend)
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    sessions = []
+    for j in range(4):
+        rounds = [Round(160, 8, "t", 0.05), Round(64, 8, "t", 0.05),
+                  Round(64, 8, None, 0.0)]
+        sessions.append(make_session(0.1 * j, rounds, ideal_time=1.0,
+                                     sid=96000 + j))
+    finished, _ = run_live(eng, sessions, timeout=180)
+    assert len(finished) == 4
+    stream = backend._impl.stream
+    assert stream.d2h_completed == stream.d2h_submitted
+    assert stream.staging.max_in_flight <= 2
+    assert eng.host.used_blocks == 0
+    eng.check_invariants()
+    backend.close()
