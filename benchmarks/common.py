@@ -65,6 +65,30 @@ def fmt_row(stats: Dict) -> Dict:
     }
 
 
+def bench_main(run_fn, dry_help: str = "CI smoke") -> None:
+    """Shared CLI epilogue for the standalone benchmarks: ``--dry``/
+    ``--full`` mode selection, JSON-lines rows on stdout, and the
+    machine-readable ``--json OUT`` file the bench-regression gate
+    (scripts/check_bench.py) consumes — one place to evolve the wire
+    shape, five call sites."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true", help=dry_help)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="also write rows as machine-readable JSON")
+    args = ap.parse_args()
+    rows = run_fn(quick=not args.full, dry=args.dry)
+    for row in rows:
+        print(json.dumps(row))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+            f.write("\n")
+
+
 def speedup_vs_best_baseline(rows: List[Dict], metric: str = "mean_s") -> Dict:
     base = [r for r in rows if r["policy"] != "mars"]
     mars = [r for r in rows if r["policy"] == "mars"]

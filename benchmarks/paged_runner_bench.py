@@ -123,13 +123,5 @@ def run(quick: bool = True, dry: bool = False) -> List[Dict]:
 
 
 if __name__ == "__main__":
-    import argparse
-    import json
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dry", action="store_true",
-                    help="CI smoke: tiny family, both layouts")
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
-    for row in run(quick=not args.full, dry=args.dry):
-        print(json.dumps(row))
+    from common import bench_main
+    bench_main(run, dry_help="CI smoke: tiny family, both layouts")

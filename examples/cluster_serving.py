@@ -27,6 +27,8 @@ def main():
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--kill", type=int, default=2,
                     help="replicas to fail mid-run")
+    ap.add_argument("--families", type=int, default=12,
+                    help="shared-prefix session families (0 = independent)")
     args = ap.parse_args()
 
     backend = SimBackend(CONFIG, H100)
@@ -42,7 +44,8 @@ def main():
 
     spec = WorkloadSpec(regime="ILR-1", arrival_rate=args.rate,
                         n_sessions=args.sessions, seed=0,
-                        max_context=CONTEXT_LIMIT)
+                        max_context=CONTEXT_LIMIT,
+                        n_families=args.families)
     arrivals = sorted(generate(spec, CONFIG, H100),
                       key=lambda s: s.arrival_time)
     rng = np.random.default_rng(0)
@@ -67,7 +70,8 @@ def main():
             router.heartbeat(rid, kv_utilization=eng.telem.kv_utilization,
                              tool_backlog=eng.tools.backlog,
                              active_sessions=len(eng.active),
-                             step_latency=max(el, 1e-3), now=now)
+                             step_latency=max(el, 1e-3),
+                             radix_digest=eng.radix_digest(), now=now)
         router.check_failures(now=now)
         router.update_stragglers(now=now)
         router.dispatch_requeued(now=now)
@@ -82,11 +86,17 @@ def main():
                 if not (killed and idx in dead) for s in e.finished]
     lat = LatencyStats.of([s.e2e_latency for s in finished])
     fail_evs = [e for e in router.events if e["ev"] == "failed"]
+    prefix = router.cluster_prefix_stats()
     print(f"\nfleet: {args.replicas} replicas ({args.kill} failed mid-run), "
           f"{len(finished)}/{args.sessions} sessions completed")
     print(f"latency mean {lat.mean:.1f}s p95 {lat.p95:.1f}s; "
           f"router events: {len(fail_evs)} failures detected, "
           f"{sum(1 for e in router.events if e['ev']=='straggler_drain')} drains")
+    print(f"cluster prefix reuse: hit rate "
+          f"{prefix['cluster_prefix_hit_rate']:.2f} over "
+          f"{prefix['cluster_prefix_queries']} sessions, "
+          f"{prefix['cluster_indexed_blocks']} indexed blocks across "
+          f"{len(prefix['replicas'])} advertising replicas")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare bench ``--json`` outputs against
+committed baselines with per-metric tolerances.
+
+    python scripts/check_bench.py --baselines benchmarks/baselines.json \
+        out/kernel.json out/kvcache.json ...
+
+``benchmarks/baselines.json`` holds a list of checks:
+
+    {"checks": [{"figure": ..., "name": ...,   # row selector
+                 "field": ...,                 # metric key in that row
+                 "baseline": <committed value>,
+                 "min": v | "max": v |         # absolute bounds, and/or
+                 "rel": r,                     # |value-baseline| <= r*|baseline|
+                 "note": "..."}]}
+
+A check fails when its row/field is missing from the collected outputs or
+any stated tolerance is violated; all checks are evaluated (no fail-fast)
+and the exit code gates CI — a perf regression fails the PR instead of
+waiting for a human to diff BENCH numbers. ``--update`` rewrites each
+check's ``baseline`` from the current rows (tolerances untouched) for
+intentional re-baselining; the diff still goes through review.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def load_rows(paths: List[str]) -> List[dict]:
+    rows: List[dict] = []
+    for p in paths:
+        with open(p) as f:
+            data = json.load(f)
+        rows.extend(data["rows"] if isinstance(data, dict) else data)
+    return rows
+
+
+def find_row(rows: List[dict], figure: str, name: str) -> Optional[dict]:
+    for r in rows:
+        if r.get("figure") == figure and r.get("name") == name:
+            return r
+    return None
+
+
+def evaluate(check: dict, rows: List[dict]) -> Tuple[bool, str]:
+    """(ok, human-readable detail) for one baseline check."""
+    where = f"{check['figure']}/{check['name']}.{check['field']}"
+    row = find_row(rows, check["figure"], check["name"])
+    if row is None:
+        return False, f"{where}: row missing from bench output"
+    val = row.get(check["field"])
+    if val is None:
+        return False, f"{where}: field missing/null in bench output"
+    probs = []
+    if "min" in check and val < check["min"]:
+        probs.append(f"{val} < min {check['min']}")
+    if "max" in check and val > check["max"]:
+        probs.append(f"{val} > max {check['max']}")
+    if "rel" in check:
+        base = check["baseline"]
+        if base == 0:
+            # rel-to-zero degenerates to exact-match ("any nonzero value
+            # drifted"); flag the config loudly — including a baseline that
+            # --update rewrote to 0 — instead of emitting confusing drift
+            probs.append("rel tolerance is meaningless with baseline 0 "
+                         "(use min/max bounds)")
+        elif abs(val - base) > check["rel"] * abs(base):
+            probs.append(f"{val} drifted > {check['rel']:.0%} from "
+                         f"baseline {base}")
+    if probs:
+        return False, f"{where}: " + "; ".join(probs)
+    return True, f"{where}: {val} ok (baseline {check.get('baseline')})"
+
+
+def update_baselines(spec: dict, rows: List[dict], path: str) -> None:
+    for check in spec["checks"]:
+        row = find_row(rows, check["figure"], check["name"])
+        if row is not None and row.get(check["field"]) is not None:
+            check["baseline"] = row[check["field"]]
+    with open(path, "w") as f:
+        json.dump(spec, f, indent=1)
+        f.write("\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("outputs", nargs="+",
+                    help="bench --json output files to check")
+    ap.add_argument("--baselines", default="benchmarks/baselines.json")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baseline values from the current rows "
+                         "(tolerances untouched), then check")
+    args = ap.parse_args(argv)
+    with open(args.baselines) as f:
+        spec = json.load(f)
+    rows = load_rows(args.outputs)
+    if args.update:
+        update_baselines(spec, rows, args.baselines)
+        print(f"baselines rewritten: {args.baselines}")
+    failures = 0
+    for check in spec["checks"]:
+        ok, detail = evaluate(check, rows)
+        print(("PASS  " if ok else "FAIL  ") + detail)
+        failures += 0 if ok else 1
+    if failures:
+        print(f"\n{failures}/{len(spec['checks'])} bench checks failed "
+              f"(see {args.baselines} for tolerances)", file=sys.stderr)
+        return 1
+    print(f"\nall {len(spec['checks'])} bench checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,17 @@
 #!/usr/bin/env bash
-# CI pipeline: hygiene gates, tier-1 test suite, benchmark smokes.
-# Mirrors ROADMAP.md "Tier-1 verify"; runs hermetically (no network,
-# hypothesis optional — tests fall back to tests/_hypo.py).
+# CI pipeline: hygiene gates, lint, tier-1 test suite, benchmark smokes,
+# bench-regression gate. Mirrors ROADMAP.md "Tier-1 verify"; runs
+# hermetically (no network, hypothesis optional — tests fall back to
+# tests/_hypo.py; ruff optional — enforced where requirements-dev.txt is
+# installed, i.e. the GitHub workflows).
 #
 # Env knobs (all optional):
 #   PYTEST_JUNIT=path.xml  write a junit report (uploaded as a CI artifact)
 #   PYTEST_MARKS=<expr>    override the default marker expression; set it
 #                          EMPTY for the nightly-style full set:
 #                          PYTEST_MARKS= bash scripts/ci.sh
+#   BENCH_JSON_DIR=dir     where the benchmark --json outputs land
+#                          (default: a mktemp dir; uploaded by nightly)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -20,13 +24,34 @@ if git ls-files | grep -E '(\.pyc$|(^|/)__pycache__(/|$))'; then
     exit 1
 fi
 
+# lint gate (ruff pinned in requirements-dev.txt, config in pyproject.toml);
+# skipped only where dev deps can't be installed (hermetic local images)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src benchmarks scripts tests examples
+else
+    echo "NOTE: ruff not installed; lint gate skipped (CI enforces it)"
+fi
+
 # fast syntax gate: a SyntaxError fails in seconds, not after the suite
 python -m compileall -q src
 
 python -m pytest -x -q ${PYTEST_JUNIT:+--junitxml="$PYTEST_JUNIT"} \
     ${PYTEST_MARKS+-m "$PYTEST_MARKS"}
 
-python benchmarks/kernel_bench.py --dry
-python benchmarks/kvcache_bench.py --dry
-python benchmarks/paged_runner_bench.py --dry
-python benchmarks/swap_stream_bench.py --dry
+# benchmark smokes emit machine-readable metrics; check_bench gates them
+# against committed baselines so a perf regression fails the PR here, not
+# a reader of BENCH files three weeks later
+BENCH_JSON_DIR="${BENCH_JSON_DIR:-$(mktemp -d)}"
+mkdir -p "$BENCH_JSON_DIR"
+python benchmarks/kernel_bench.py --dry --json "$BENCH_JSON_DIR/kernel.json"
+python benchmarks/kvcache_bench.py --dry --json "$BENCH_JSON_DIR/kvcache.json"
+python benchmarks/paged_runner_bench.py --dry --json "$BENCH_JSON_DIR/paged_runner.json"
+python benchmarks/swap_stream_bench.py --dry --json "$BENCH_JSON_DIR/swap_stream.json"
+python benchmarks/cross_replica_bench.py --dry --json "$BENCH_JSON_DIR/cross_replica.json"
+# the five fresh files are named explicitly — a glob would also pick up
+# stale/quick-config rows persisting in an externally-supplied dir (e.g.
+# nightly's *-quick.json), and same-(figure,name) rows would shadow these
+python scripts/check_bench.py --baselines benchmarks/baselines.json \
+    "$BENCH_JSON_DIR"/kernel.json "$BENCH_JSON_DIR"/kvcache.json \
+    "$BENCH_JSON_DIR"/paged_runner.json "$BENCH_JSON_DIR"/swap_stream.json \
+    "$BENCH_JSON_DIR"/cross_replica.json

@@ -38,12 +38,26 @@ class ExternalControlPlane:
         self.bus = bus
         self.w_adm = cfg.w_init
         self._last_update = -1e18
+        # radix-aware admission: session -> blocks of its chunk-key prefix
+        # already indexed on this replica (exact ``RadixIndex.match`` when
+        # bound in-process by the engine; a remote control plane can bind
+        # ``kvcache.radix.estimate_digest_match`` over the heartbeat digest)
+        self.prefix_lookup = None
 
     # --- helpers -------------------------------------------------------------
     def estimate_blocks(self, s: Session) -> int:
         """Lightweight per-session KV-block estimate from prefill length
-        (proxy for both compute demand and spatial footprint)."""
-        return max(1, -(-s.pending_prefill // self.cfg.block_size))
+        (proxy for both compute demand and spatial footprint), minus the
+        shared prefix this replica's radix index already holds — a family
+        member attaching to an existing repository context neither computes
+        nor (physically) allocates those blocks, so under pressure it may
+        admit earlier than its raw prompt size suggests. Never estimates
+        below one chunk: even a full-duplicate session recomputes/holds at
+        least its tail block."""
+        est = -(-s.pending_prefill // self.cfg.block_size)
+        if self.prefix_lookup is not None:
+            est -= max(0, int(self.prefix_lookup(s)))
+        return max(1, est)
 
     # --- Alg.1 PackQueue ------------------------------------------------------
     def pack_queue(self, queue: List[Session]) -> List[Session]:

@@ -46,18 +46,22 @@ class Policy:
         self.host_tier = None          # bound by the engine when tiered
         self.swap_size_fn = None       # session -> (tokens, blocks) moved
         self.async_swap = False        # backend runs a background swap stream
+        self.prefix_lookup = None      # session -> indexed prefix blocks
 
     def bind_services(self, host_tier=None, swap_size_fn=None,
-                      async_swap=False) -> None:
+                      async_swap=False, prefix_lookup=None) -> None:
         """Engine-owned KV services handed to the policy after
         construction: the host-DRAM tier, the per-block offload sizing
         (what would *actually* cross PCIe — radix-shared blocks stay on
-        device), and whether the backend runs an async swap stream (swap-in
+        device), whether the backend runs an async swap stream (swap-in
         prefetch overlaps other sessions' compute, so restores stop
-        serializing GPU ticks). Baselines ignore them."""
+        serializing GPU ticks), and the radix prefix lookup (session ->
+        blocks of its chunk-key prefix already indexed here, for
+        radix-aware admission sizing). Baselines ignore them."""
         self.host_tier = host_tier
         self.swap_size_fn = swap_size_fn
         self.async_swap = async_swap
+        self.prefix_lookup = prefix_lookup
 
     # --- admission (external) ----------------------------------------------
     def admit(self, queue: List[Session], now: float) -> List[Session]:
@@ -202,8 +206,12 @@ class MARSPolicy(Policy):
             self.name = "mars-no-cosched"
 
     def bind_services(self, host_tier=None, swap_size_fn=None,
-                      async_swap=False) -> None:
-        super().bind_services(host_tier, swap_size_fn, async_swap)
+                      async_swap=False, prefix_lookup=None) -> None:
+        super().bind_services(host_tier, swap_size_fn, async_swap,
+                              prefix_lookup)
+        # radix-aware admission (Alg. 1 ext.): queue packing estimates
+        # footprint net of the already-indexed shared prefix
+        self.control.prefix_lookup = prefix_lookup
         self.cosched.swap_seconds = \
             host_tier.swap_seconds if host_tier is not None else None
         # price the PCIe leg by what per-block offload actually moves

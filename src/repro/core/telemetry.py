@@ -67,6 +67,11 @@ class Telemetry:
         self.prefix_queries = 0
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
+        # radix-root digest summary (what this replica advertises to the
+        # cluster router for family-aware placement)
+        self.digest_anchors = 0
+        self.digest_indexed_blocks = 0
+        self.digest_version = 0
         bus.subscribe(ev.TOOL_START, self._on_tool_start)
         bus.subscribe(ev.TOOL_END, self._on_tool_end)
         bus.subscribe(ev.PREEMPT, self._on_preempt)
@@ -132,10 +137,28 @@ class Telemetry:
         self.prefix_hits = hits
         self.prefix_hit_tokens = hit_tokens
 
+    def probe_digest(self, digest: Optional[dict]) -> None:
+        """Snapshot of the exported radix-root digest (see kvcache.radix):
+        how much shareable state this replica advertises cluster-wide."""
+        if not digest:
+            self.digest_anchors = 0
+            self.digest_indexed_blocks = 0
+            self.digest_version = 0
+            return
+        self.digest_anchors = len(digest.get("anchors") or {})
+        self.digest_indexed_blocks = digest.get("indexed_blocks", 0)
+        self.digest_version = digest.get("v", 0)
+
     # --- derived -------------------------------------------------------------
     @property
     def kv_utilization(self) -> float:
         return 1.0 - self.free_blocks / self.total_blocks
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Sharing sessions per index-consulting session (≤ 1 by the
+        record_query/record_hit discipline in kvcache.radix)."""
+        return self.prefix_hits / max(1, self.prefix_queries)
 
     @property
     def host_occupancy(self) -> float:

@@ -7,11 +7,36 @@ window, EMA step latency), and the router
   * places sessions on the replica with the best (pressure, affinity) score —
     KV locality first: a session returns to the replica that served it last
     (warm state), unless that replica is overloaded or degraded;
+  * accumulates session *families* (shared repository contexts) on the
+    replica whose radix index already holds their prefix, instead of every
+    replica paying the same cold prefill (cross-replica prefix reuse);
   * detects failures by heartbeat timeout and re-queues the victim's sessions
     (they resume by prefix recompute — see checkpoint.snapshot_engine);
   * mitigates stragglers: replicas whose EMA step latency exceeds
     ``straggler_factor`` x fleet median get drained (no new placements);
   * supports elastic join/leave at any time.
+
+**Radix-digest wire format.** Family placement is driven by a compact
+radix-root digest each replica exports in its heartbeat
+(``RadixIndex.digest(top_k)``, O(k) not O(tree)) — a JSON-serializable dict:
+
+    {"v": <monotone version, bumped on insert/evict>,
+     "indexed_blocks": <total blocks in the index>,
+     "queries"/"hits"/"hit_tokens": <index-wide prefix stats>,
+     "anchors": {<anchor hex>: {"blocks":  # indexed blocks in the subtree
+                                "depth":   # longest indexed chunk chain
+                                "hits"/"queries"/"hit_rate"}, ...}}
+
+An *anchor* is a direct child of the radix root — the first chunk key of an
+indexed prefix stream, identifying one session family / repository context.
+Anchor hex keys are ``chunk_key_digest`` values (blake2b of the chunk key's
+repr, process-independent), so the incoming session's own chunk-key prefix
+(``meta["prefix_hashes"]`` from workloads.generator) can be matched against
+any replica's digest without sharing a process. ``_score`` turns the match
+into a longest-indexed-prefix bonus with a load-spill guard (a hot family
+still overflows to other replicas instead of melting its home); digests are
+heartbeat-carried soft state — cleared on failure, gone with the replica on
+``leave``, and absent on a re-registered replica until its first beat.
 
 This layer is transport-agnostic: replicas here are in-process Engine objects
 (tests/examples drive thousands of simulated nodes); a deployment would put
@@ -25,7 +50,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.session import KVState, Session
+from repro.core.session import KVState, Phase, Session
+from repro.kvcache.radix import chunk_key_digest, estimate_digest_match
 
 
 def _reset_kv_accounting(s: Session, engine=None, now: float = 0.0) -> None:
@@ -40,6 +66,21 @@ def _reset_kv_accounting(s: Session, engine=None, now: float = 0.0) -> None:
     detach = getattr(engine, "detach_session", None)
     if detach is not None:
         detach(s, now)
+    if s.phase == Phase.TOOL:
+        # evacuated mid-tool: the in-flight tool was cancelled with the old
+        # replica, so the new home re-decodes this round and re-runs the
+        # tool at the usual boundary. Without the reset, a session whose
+        # decode quantum had completed carries decoded == decode_tokens
+        # into DECODING on the new replica — a 0-token quantum that no
+        # batch ever picks up and no timer ever finishes (livelock).
+        s.decoded = 0
+        s.first_token_seen = False
+        # the re-decoded round re-records its TTFT on the new home; keep
+        # the per-round list aligned (one entry per round) by dropping the
+        # stale entry measured on the dead replica
+        del s.ttfts[s.cur_round:]
+        for k in ("tool_kind_running", "tool_duration"):
+            s.meta.pop(k, None)
     s.kv_blocks = 0
     s.resident_len = 0
     s.kv_state = KVState.NONE
@@ -47,8 +88,9 @@ def _reset_kv_accounting(s: Session, engine=None, now: float = 0.0) -> None:
     s.meta.pop("host_tier", None)
     # radix bookkeeping is per-replica: the new home's index knows nothing
     # of the chunks this session indexed (or attached to) on the old one
+    # (prefix_anchor survives — it is workload identity, not replica state)
     for k in ("prefix_chunks_indexed", "radix_inserted", "radix_hit",
-              "radix_queried", "radix_stale_at"):
+              "radix_queried", "radix_stale_at", "radix_admission_est"):
         s.meta.pop(k, None)
 
 
@@ -64,6 +106,7 @@ class ReplicaState:
     alive: bool = True
     draining: bool = False
     placed: Dict[int, float] = field(default_factory=dict)   # sid -> t
+    radix_digest: Optional[dict] = None     # heartbeat-carried soft state
 
 
 @dataclass
@@ -73,6 +116,18 @@ class RouterConfig:
     ema_alpha: float = 0.2
     overload_kv: float = 0.95
     affinity_bonus: float = 0.35
+    # cross-replica prefix reuse: score bonus scale for a full-prefix digest
+    # match (scaled by matched fraction), and the load-spill guard — above
+    # this KV utilization a replica stops *attracting* its family (members
+    # overflow by plain pressure score) though per-session affinity stands
+    prefix_bonus: float = 0.5
+    prefix_spill_kv: float = 0.85
+    # bound on the straggler score penalty: an unbounded ema/median ratio
+    # lets one slow-tick heartbeat (a big prefill batch, a GC pause) drown
+    # every affinity term; sustained stragglers are drained by
+    # update_stragglers anyway, so the *score* penalty only needs to break
+    # ties away from slow replicas, not to dominate
+    straggler_penalty_cap: float = 2.0
 
 
 class ClusterRouter:
@@ -104,7 +159,12 @@ class ClusterRouter:
     # --- telemetry -----------------------------------------------------------
     def heartbeat(self, rid: str, *, kv_utilization: float, tool_backlog: int,
                   active_sessions: int, step_latency: float,
+                  radix_digest: Optional[dict] = None,
                   now: float = None) -> None:
+        """``radix_digest`` is the replica's radix-root export (see module
+        docstring); it is refreshed wholesale each beat — a digest-blind
+        replica (no radix index, or an older heartbeat sender) simply never
+        attracts family placements."""
         r = self.replicas.get(rid)
         if r is None:
             return
@@ -113,6 +173,7 @@ class ClusterRouter:
         r.kv_utilization = kv_utilization
         r.tool_backlog = tool_backlog
         r.active_sessions = active_sessions
+        r.radix_digest = radix_digest
         a = self.cfg.ema_alpha
         r.step_latency_ema = step_latency if r.step_latency_ema == 0 else \
             (1 - a) * r.step_latency_ema + a * step_latency
@@ -127,6 +188,9 @@ class ClusterRouter:
         for r in self.replicas.values():
             if r.alive and now - r.last_heartbeat > self.cfg.heartbeat_timeout:
                 r.alive = False
+                # the advertised prefix state died with the replica's pool;
+                # a recovered replica re-advertises on its next heartbeat
+                r.radix_digest = None
                 failed.append(r.rid)
                 self.events.append({"t": now, "ev": "failed", "rid": r.rid})
                 if r.engine is not None:
@@ -156,16 +220,38 @@ class ClusterRouter:
         return out
 
     # --- placement -----------------------------------------------------------
+    def _prefix_match_frac(self, r: ReplicaState, s: Session) -> float:
+        """Fraction of the session's chunk-key prefix already indexed on
+        ``r``, estimated from its heartbeat digest (0.0 when either side is
+        digest-blind — an empty digest scores exactly neutrally)."""
+        hashes = s.meta.get("prefix_hashes")
+        if not hashes or not r.radix_digest:
+            return 0.0
+        anchor = s.meta.get("prefix_anchor")
+        if anchor is None:
+            anchor = chunk_key_digest(hashes[0][0])
+            s.meta["prefix_anchor"] = anchor     # hash once per session
+        matched = estimate_digest_match(r.radix_digest, hashes, anchor)
+        return matched / len(hashes)
+
     def _score(self, r: ReplicaState, s: Session) -> float:
         """Lower is better: dual-pressure load + straggler penalty -
-        KV-locality affinity."""
+        KV-locality affinity - family (longest-indexed-prefix) affinity."""
         load = r.kv_utilization + 0.05 * r.tool_backlog \
             + 0.02 * r.active_sessions
         med = self._median_latency()
         if med > 0 and r.step_latency_ema > 0:
-            load += max(0.0, r.step_latency_ema / med - 1.0)
+            load += min(self.cfg.straggler_penalty_cap,
+                        max(0.0, r.step_latency_ema / med - 1.0))
         if self.session_home.get(s.sid) == r.rid:
             load -= self.cfg.affinity_bonus      # warm KV / state locality
+        if r.kv_utilization < self.cfg.prefix_spill_kv:
+            # family locality: pull the session toward the replica whose
+            # radix index holds the longest slice of its prefix, so one
+            # replica accumulates each repository context. The spill guard
+            # lets a hot family overflow instead of stacking onto an
+            # already-pressured home.
+            load -= self.cfg.prefix_bonus * self._prefix_match_frac(r, s)
         return load
 
     def place(self, s: Session, now: float = None) -> Optional[str]:
@@ -193,3 +279,35 @@ class ClusterRouter:
                 break
             n += 1
         return n
+
+    # --- cluster telemetry ----------------------------------------------------
+    def cluster_prefix_stats(self) -> dict:
+        """Fleet-wide prefix-reuse view from the heartbeat digests (alive
+        replicas only): per-replica digest stats plus the cluster hit rate —
+        the fraction of index-consulting sessions, anywhere, that attached
+        to an already-built prefix. This is the number family-aware
+        placement moves: co-locating a family turns its N-1 cold prefills
+        into hits on one replica instead of N-1 misses on N-1 replicas."""
+        per_replica = {}
+        queries = hits = hit_tokens = blocks = 0
+        for r in self.replicas.values():
+            if not r.alive or not r.radix_digest:
+                continue
+            d = r.radix_digest
+            per_replica[r.rid] = {
+                "anchors": len(d.get("anchors") or {}),
+                "indexed_blocks": d.get("indexed_blocks", 0),
+                "queries": d.get("queries", 0),
+                "hits": d.get("hits", 0),
+                "hit_tokens": d.get("hit_tokens", 0),
+            }
+            queries += d.get("queries", 0)
+            hits += d.get("hits", 0)
+            hit_tokens += d.get("hit_tokens", 0)
+            blocks += d.get("indexed_blocks", 0)
+        return {"replicas": per_replica,
+                "cluster_prefix_queries": queries,
+                "cluster_prefix_hits": hits,
+                "cluster_prefix_hit_tokens": hit_tokens,
+                "cluster_indexed_blocks": blocks,
+                "cluster_prefix_hit_rate": hits / max(1, queries)}

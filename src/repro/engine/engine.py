@@ -100,7 +100,10 @@ class Engine:
                                           backend, mars_cfg)
         self.policy.bind_services(host_tier=self.host,
                                   swap_size_fn=self._private_swap_size,
-                                  async_swap=self._async_swap)
+                                  async_swap=self._async_swap,
+                                  prefix_lookup=(self._indexed_prefix_blocks
+                                                 if self.radix is not None
+                                                 else None))
         self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
         self.waiting: List[Session] = []
         self.active: List[Session] = []
@@ -273,6 +276,37 @@ class Engine:
         if self.radix is not None:
             self.telem.probe_prefix(self.radix.queries, self.radix.hits,
                                     self.radix.hit_tokens)
+            self.telem.probe_digest(self.radix.digest())
+
+    # --- cross-replica prefix reuse ------------------------------------
+    def radix_digest(self, top_k: int = 16) -> Optional[dict]:
+        """Compact radix-root digest for the cluster router's heartbeat
+        (None when prefix sharing is off — a digest-blind replica). Cached
+        per index version, so per-tick callers pay a dict lookup."""
+        return self.radix.digest(top_k) if self.radix is not None else None
+
+    def _indexed_prefix_blocks(self, s: Session) -> int:
+        """Blocks of ``s``'s round-0 chunk-key prefix already indexed on
+        this replica (exact ``RadixIndex.match``) — admission sizes family
+        members net of the shared context they will attach to, not build.
+        The match is cached against the index *structure* (insert count +
+        node count, which eviction shrinks): pack_queue re-estimates every
+        queued session several times per admission cycle, every tick —
+        without the stamp that is O(queue x prefix) tree walks of pure
+        recomputation (same trouble the attach path's radix_stale_at
+        stamp exists for)."""
+        if self.radix is None or s.cur_round != 0 or s.decoded:
+            return 0
+        hashes = s.meta.get("prefix_hashes")
+        if not hashes:
+            return 0
+        key = (self.radix.inserted_blocks, len(self.radix))
+        cached = s.meta.get("radix_admission_est")
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        n = len(self.radix.match(hashes))
+        s.meta["radix_admission_est"] = (key, n)
+        return n
 
     # --- tiered KV helpers ---------------------------------------------
     def _swap_record(self, s: Session):
@@ -319,7 +353,7 @@ class Engine:
             return False          # partial tail block: not chunk-aligned
         if not s.meta.get("radix_queried"):
             s.meta["radix_queried"] = True
-            self.radix.record_query()
+            self.radix.record_query(anchor=hashes[0][0])
         matched = self.radix.match(hashes)
         if len(matched) <= held:
             s.meta["radix_stale_at"] = self.radix.inserted_blocks
@@ -349,7 +383,8 @@ class Engine:
         s.context_len = max(s.context_len, s.resident_len)
         s.kv_state = KVState.RESIDENT
         self.prefix_hit_tokens += toks
-        self.radix.record_hit(toks, first=not s.meta.get("radix_hit"))
+        self.radix.record_hit(toks, first=not s.meta.get("radix_hit"),
+                              anchor=hashes[0][0])
         s.meta["radix_hit"] = True
         self.bus.emit(ev.PREFIX_HIT, now, s.sid, tokens=toks,
                       blocks=len(bids))

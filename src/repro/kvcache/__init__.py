@@ -14,10 +14,12 @@ Four layers that together replace the counter-only block manager:
 """
 from repro.kvcache.host_tier import HostTier, HostTierConfig
 from repro.kvcache.pool import BlockPool, DeviceBindingMap, TieredPoolProbe
-from repro.kvcache.radix import RadixIndex
+from repro.kvcache.radix import (RadixIndex, chunk_key_digest,
+                                 estimate_digest_match)
 from repro.kvcache.swap_stream import (StagingBuffers, SwapStream,
                                        TransferFuture, resolved_future)
 
 __all__ = ["BlockPool", "DeviceBindingMap", "TieredPoolProbe", "RadixIndex",
            "HostTier", "HostTierConfig", "SwapStream", "StagingBuffers",
-           "TransferFuture", "resolved_future"]
+           "TransferFuture", "resolved_future", "chunk_key_digest",
+           "estimate_digest_match"]

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.session import Round, Session, make_session
+from repro.kvcache.radix import chunk_key_digest
 from repro.models import perf_model as pm
 from repro.models.config import ModelConfig
 
@@ -166,6 +167,11 @@ def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
             s.meta["prefix_hashes"] = _chunk_keys(
                 wl, fid, useed, fam_shared[fid],
                 rounds[0].new_input_tokens, spec.chunk_tokens)
+            # wire-format anchor (first chunk key, hashed once here): the
+            # cluster router matches this against heartbeat radix digests
+            # to pull family members toward their repository context's home
+            s.meta["prefix_anchor"] = chunk_key_digest(
+                s.meta["prefix_hashes"][0][0])
         sessions.append(s)
     return sessions
 

@@ -156,6 +156,53 @@ def test_pack_queue_descending_under_cpu_overload():
     assert est == sorted(est, reverse=True)
 
 
+def test_estimate_blocks_subtracts_indexed_prefix_floor_one_chunk():
+    """Radix-aware admission: the block estimate is net of the shared
+    prefix already indexed on the replica, and never drops below one
+    chunk — even a full-duplicate session holds/recomputes its tail."""
+    t, bus = _telem()
+    cp = ExternalControlPlane(ControlPlaneConfig(block_size=32), t, bus)
+    (s,) = _sessions([3200])             # 100 blocks raw
+    assert cp.estimate_blocks(s) == 100
+    cp.prefix_lookup = lambda _s: 60
+    assert cp.estimate_blocks(s) == 40
+    # full (or over-reported) match floors at one chunk, never 0/negative
+    cp.prefix_lookup = lambda _s: 100
+    assert cp.estimate_blocks(s) == 1
+    cp.prefix_lookup = lambda _s: 10_000
+    assert cp.estimate_blocks(s) == 1
+    # a lookup that reports garbage below zero must not inflate the estimate
+    cp.prefix_lookup = lambda _s: -5
+    assert cp.estimate_blocks(s) == 100
+
+
+def test_engine_binds_exact_prefix_lookup_to_admission():
+    """The MARS control plane sizes family members by the engine's exact
+    RadixIndex.match — once the builder has indexed the shared context, a
+    sibling's admission estimate collapses to its private tail."""
+    from repro.configs.qwen3_coder_30b import CONFIG as QWEN3
+    from repro.engine.backend import SimBackend
+    from repro.engine.engine import Engine, EngineConfig
+    from repro.models.perf_model import H100
+    eng = Engine(EngineConfig(total_kv_blocks=512, block_size=32,
+                              token_budget=8192), "mars",
+                 SimBackend(QWEN3, H100))
+    cp = eng.policy.control
+    builder = make_session(0.0, [Round(8 * 32, 8, None, 0.0)])
+    builder.meta["prefix_hashes"] = [(("fam", i), 32) for i in range(8)]
+    sib = make_session(0.0, [Round(10 * 32, 8, None, 0.0)])
+    sib.meta["prefix_hashes"] = [(("fam", i), 32) for i in range(8)] + \
+        [(("u", i), 32) for i in range(2)]
+    assert cp.estimate_blocks(sib) == 10         # nothing indexed yet
+    eng.submit(builder)
+    now = 0.0
+    for _ in range(6):
+        el, _ = eng.tick(now)
+        now += max(el, 0.05)
+    assert eng.radix.inserted_blocks >= 8
+    assert cp.estimate_blocks(sib) == 2          # private tail only
+
+
 def test_pack_queue_first_fit_when_all_long():
     t, bus = _telem()
     t.free_blocks = 2500

@@ -403,6 +403,45 @@ def test_router_failover_cancels_inflight_tools():
     e1.check_invariants()
 
 
+def test_router_midtool_victim_completes_on_new_replica():
+    """A session evacuated mid-tool has already finished its round's decode
+    quantum; re-placement must reset the round progress so the new replica
+    re-decodes and re-runs the cancelled tool — without the reset the
+    session lands in DECODING with decoded == decode_tokens, a 0-token
+    quantum no batch picks up and no timer finishes (livelock)."""
+    from repro.core.session import Phase, Round, make_session
+    r = ClusterRouter(RouterConfig(heartbeat_timeout=5.0))
+    e1 = _mini_engine()
+    r.register("a", e1, now=0.0)
+    r.heartbeat("a", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, now=0.0)
+    s = make_session(0.0, [Round(2_000, 16, "t", 50.0),
+                           Round(1_000, 8, None, 0.0)], ideal_time=1.0)
+    assert r.place(s, now=0.0) == "a"
+    now = 0.0
+    while s.phase != Phase.TOOL and now < 100.0:
+        el, _ = e1.tick(now)
+        now += max(el, 0.05)
+    assert s.phase == Phase.TOOL
+    assert s.decoded == s.rounds[0].decode_tokens   # quantum complete
+    assert r.check_failures(now=100.0) == ["a"]
+    assert s in r.requeued
+    assert s.decoded == 0 and not s.first_token_seen
+    e2 = _mini_engine()
+    r.register("b", e2, now=100.0)
+    r.heartbeat("b", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, now=100.0)
+    assert r.dispatch_requeued(now=100.0) == 1
+    assert r.session_home[s.sid] == "b"
+    from repro.engine.engine import run_sim
+    finished, _ = run_sim(e2, [], max_time=1e4)
+    assert s in finished                            # re-decode + re-run tool
+    # per-round TTFT stays one entry per round: the stale entry measured on
+    # the dead replica was dropped with the round-progress reset
+    assert len(s.ttfts) == len(s.rounds)
+    e2.check_invariants()
+
+
 def test_router_elastic_join_leave():
     r = ClusterRouter()
     e1 = _mini_engine()
@@ -420,3 +459,162 @@ def test_router_elastic_join_leave():
     r.heartbeat("b", kv_utilization=0.1, tool_backlog=0, active_sessions=0,
                 step_latency=0.1, now=2.0)
     assert r.place(s, now=2.0) == "b"
+
+
+# ---------------------------------------------------------------------------
+# cross-replica prefix reuse (radix digests in heartbeats)
+# ---------------------------------------------------------------------------
+
+def _family_session(n_shared=8, n_tail=0, fam="fam", tag=None):
+    from repro.core.session import Round, make_session
+    s = make_session(0.0, [Round(32 * (n_shared + n_tail), 8, None, 0.0)],
+                     ideal_time=1.0)
+    s.meta["prefix_hashes"] = [((fam, i), 32) for i in range(n_shared)] + \
+        [((tag, i), 32) for i in range(n_tail)]
+    return s
+
+
+def _digest_for(fam="fam", blocks=8, depth=8, hits=0, queries=0):
+    from repro.kvcache.radix import chunk_key_digest
+    return {"v": 1, "indexed_blocks": blocks, "queries": queries,
+            "hits": hits, "hit_tokens": 0,
+            "anchors": {chunk_key_digest((fam, 0)): {
+                "blocks": blocks, "depth": depth,
+                "hits": hits, "queries": queries,
+                "hit_rate": hits / max(1, queries)}}}
+
+
+def _beat(r, rid, *, util=0.1, digest=None, now=0.0):
+    r.heartbeat(rid, kv_utilization=util, tool_backlog=0, active_sessions=0,
+                step_latency=0.1, radix_digest=digest, now=now)
+
+
+def test_router_prefix_match_pulls_family_spill_guard_overrides():
+    """A replica advertising the session's anchor wins placement despite a
+    mild load disadvantage; past the spill threshold the pull is off and
+    the family overflows by plain pressure score."""
+    r = ClusterRouter(RouterConfig())
+    for rid in ("a", "b"):
+        r.register(rid, None, now=0.0)
+    _beat(r, "a", util=0.05)
+    _beat(r, "b", util=0.25, digest=_digest_for())   # warmer but has the prefix
+    s = _family_session()
+    assert r.place(s, now=0.0) == "b"
+    # hot home: same digest, utilization past prefix_spill_kv -> overflow
+    s2 = _family_session()
+    _beat(r, "b", util=r.cfg.prefix_spill_kv + 0.02, digest=_digest_for())
+    assert r.place(s2, now=1.0) == "a"
+
+
+def test_router_empty_digest_scores_neutrally():
+    """No digest, an empty-anchor digest, and a non-matching digest must
+    all produce the identical score — digest-blind replicas are never
+    penalized (or favored) for what they don't advertise."""
+    r = ClusterRouter(RouterConfig())
+    r.register("a", None, now=0.0)
+    _beat(r, "a", util=0.2)
+    s = _family_session()
+    ra = r.replicas["a"]
+    base = r._score(ra, s)
+    _beat(r, "a", util=0.2, digest={"v": 0, "anchors": {}})
+    assert r._score(ra, s) == base
+    _beat(r, "a", util=0.2, digest=_digest_for(fam="other"))
+    assert r._score(ra, s) == base
+    # and a session with no prefix metadata is unaffected by a rich digest
+    from repro.core.session import Round, make_session
+    plain = make_session(0.0, [Round(256, 8, None, 0.0)], ideal_time=1.0)
+    _beat(r, "a", util=0.2)
+    base_plain = r._score(ra, plain)
+    _beat(r, "a", util=0.2, digest=_digest_for())
+    assert r._score(ra, plain) == base_plain
+
+
+def test_router_failure_clears_stale_digest():
+    """A failed replica's advertised prefix state died with its pool: the
+    digest is invalidated with the failure, so requeued sessions are
+    re-placed by load, not by a ghost index."""
+    r = ClusterRouter(RouterConfig(heartbeat_timeout=5.0))
+    e1, e2 = _mini_engine(), _mini_engine()
+    r.register("a", e1, now=0.0)
+    r.register("b", e2, now=0.0)
+    _beat(r, "a", util=0.1, digest=_digest_for())
+    _beat(r, "b", util=0.1)
+    s = _family_session()
+    assert r.place(s, now=0.0) == "a"
+    _beat(r, "b", util=0.1, now=10.0)            # only b stays alive
+    assert r.check_failures(now=10.0) == ["a"]
+    assert r.replicas["a"].radix_digest is None
+    assert s in r.requeued
+    assert r.dispatch_requeued(now=10.0) == 1
+    assert r.session_home[s.sid] == "b"
+
+
+def test_router_reregistered_replica_starts_digest_clean():
+    r = ClusterRouter(RouterConfig())
+    r.register("a", None, now=0.0)
+    _beat(r, "a", util=0.1, digest=_digest_for())
+    assert r.replicas["a"].radix_digest is not None
+    r.leave("a", now=1.0)
+    assert "a" not in r.replicas                 # digest gone with the replica
+    r.register("a", None, now=2.0)
+    assert r.replicas["a"].radix_digest is None
+    # an omitted-digest heartbeat keeps it clean (refresh-wholesale)
+    _beat(r, "a", util=0.1, now=2.5)
+    assert r.replicas["a"].radix_digest is None
+    s = _family_session()
+    ra = r.replicas["a"]
+    assert r._prefix_match_frac(ra, s) == 0.0
+
+
+def test_router_cluster_prefix_stats_aggregates_alive_digests():
+    r = ClusterRouter(RouterConfig(heartbeat_timeout=5.0))
+    for rid in ("a", "b", "c"):
+        r.register(rid, None, now=0.0)
+    _beat(r, "a", digest=_digest_for(fam="f1", hits=3, queries=4))
+    _beat(r, "b", digest=_digest_for(fam="f2", hits=1, queries=2))
+    _beat(r, "c")                                # digest-blind
+    stats = r.cluster_prefix_stats()
+    assert set(stats["replicas"]) == {"a", "b"}
+    assert stats["cluster_prefix_hits"] == 4
+    assert stats["cluster_prefix_queries"] == 6
+    assert stats["cluster_prefix_hit_rate"] == pytest.approx(4 / 6)
+    # a dead replica's digest leaves the aggregate with the failure
+    _beat(r, "b", digest=_digest_for(fam="f2", hits=1, queries=2), now=10.0)
+    assert set(r.check_failures(now=10.0)) == {"a", "c"}
+    stats = r.cluster_prefix_stats()
+    assert set(stats["replicas"]) == {"b"}       # a/c failed
+    assert stats["cluster_prefix_hit_rate"] == pytest.approx(1 / 2)
+
+
+def test_router_digest_placement_co_locates_family_end_to_end():
+    """Two live engines behind the router: once the builder's replica
+    advertises the family anchor, siblings land there and attach to the
+    shared blocks instead of recomputing them."""
+    r = ClusterRouter(RouterConfig())
+    engines = {"a": _mini_engine(), "b": _mini_engine()}
+    for rid, e in engines.items():
+        r.register(rid, e, now=0.0)
+        _beat(r, rid, util=0.0)
+    builder = _family_session(n_shared=16, n_tail=2, tag="t0")
+    home = r.place(builder, now=0.0)
+    now = 0.0
+    for _ in range(8):                           # build + index the prefix
+        for rid, e in engines.items():
+            el, _ = e.tick(now)
+            _beat(r, rid, util=e.telem.kv_utilization,
+                  digest=e.radix_digest(), now=now)
+            now += max(el, 0.05)
+    assert engines[home].radix.inserted_blocks >= 16
+    sibs = [_family_session(n_shared=16, n_tail=2, tag=f"t{i+1}")
+            for i in range(3)]
+    for s in sibs:
+        assert r.place(s, now=now) == home
+    for _ in range(30):
+        el, _ = engines[home].tick(now)
+        now += max(el, 0.05)
+        if all(s.meta.get("radix_hit") for s in sibs):
+            break
+    assert all(s.meta.get("radix_hit") for s in sibs)
+    assert engines[home].prefix_hit_tokens >= 3 * 16 * 32
+    for e in engines.values():
+        e.check_invariants()

@@ -12,7 +12,8 @@ from repro.core.policies import KVAction
 from repro.core.session import Round, make_session
 from repro.engine.backend import SimBackend
 from repro.engine.engine import Engine, EngineConfig, run_sim
-from repro.kvcache import BlockPool, HostTier, HostTierConfig, RadixIndex
+from repro.kvcache import (BlockPool, HostTier, HostTierConfig, RadixIndex,
+                           chunk_key_digest, estimate_digest_match)
 from repro.models.perf_model import H100
 from repro.workloads.generator import WorkloadSpec, generate
 
@@ -172,6 +173,112 @@ def test_radix_eviction_unlinks_subtree():
     assert len(r) < 4
     assert r.match(_hashes("a", 4)) == []
     p.check_consistency()
+
+
+# ---------------------------------------------------------------------------
+# radix-root digest (cross-replica prefix reuse)
+# ---------------------------------------------------------------------------
+
+def test_chunk_key_digest_deterministic_wire_form():
+    import hashlib
+    key = ("fam", 3, 0)
+    want = hashlib.blake2b(repr(key).encode(), digest_size=8).hexdigest()
+    assert chunk_key_digest(key) == want
+    assert chunk_key_digest(key) == chunk_key_digest(("fam", 3, 0))
+    assert chunk_key_digest(key) != chunk_key_digest(("fam", 3, 1))
+
+
+def test_radix_digest_tracks_anchors_incrementally():
+    p = BlockPool(32, 32)
+    r = RadixIndex(p, 32)
+    p.alloc(1, 4)
+    p.alloc(2, 2)
+    fam_a = _hashes("a", 2) + _hashes("ua", 2)
+    fam_b = _hashes("b", 2)
+    r.insert(fam_a, p.lease(1))
+    r.insert(fam_b, p.lease(2))
+    d = r.digest()
+    assert d["indexed_blocks"] == 6
+    ents = d["anchors"]
+    assert set(ents) == {chunk_key_digest(("a", 0)),
+                         chunk_key_digest(("b", 0))}
+    ea = ents[chunk_key_digest(("a", 0))]
+    assert ea["blocks"] == 4 and ea["depth"] == 4
+    eb = ents[chunk_key_digest(("b", 0))]
+    assert eb["blocks"] == 2 and eb["depth"] == 2
+    # cached per version: no churn, same object back
+    assert r.digest() is d
+    # a second member under "a" extends nothing: digest unchanged
+    r.insert(_hashes("a", 2), p.lease(1)[:2])
+    assert r.digest()["anchors"][chunk_key_digest(("a", 0))]["blocks"] == 4
+
+
+def test_radix_digest_refreshes_on_stats_and_caps_hit_rate():
+    """Stats-only changes must invalidate the cached export (the digest
+    carries index-wide queries/hits), and a sibling that queried before
+    the builder's insert created the anchor must not push the exported
+    per-anchor hit_rate above 1."""
+    p = BlockPool(16, 32)
+    r = RadixIndex(p, 32)
+    fam = _hashes("fam", 3)
+    r.record_query(anchor=("fam", 0))    # consulted before anything indexed
+    p.alloc(1, 3)
+    r.insert(fam, p.lease(1))
+    d0 = r.digest()
+    assert d0["queries"] == 1
+    r.record_query(anchor=("fam", 0))    # second sibling, anchor now live
+    d1 = r.digest()
+    assert d1 is not d0 and d1["queries"] == 2
+    for first in (True, True):           # both siblings attach
+        r.record_hit(96, first=first, anchor=("fam", 0))
+    ent = r.digest()["anchors"][chunk_key_digest(("fam", 0))]
+    assert ent["hits"] == 2
+    assert ent["hit_rate"] <= 1.0
+    # non-first hit tokens also refresh the export
+    before = r.digest()
+    r.record_hit(32, first=False, anchor=("fam", 0))
+    assert r.digest()["hit_tokens"] == before["hit_tokens"] + 32
+
+
+def test_radix_digest_shrinks_on_eviction():
+    p = BlockPool(4, 32)
+    r = RadixIndex(p, 32)
+    p.alloc(1, 4)
+    r.insert(_hashes("a", 4), p.lease(1))
+    v0 = r.digest()["v"]
+    p.release_all(1)
+    p.alloc(2, 4)        # evicts every cached block under the anchor
+    d = r.digest()
+    assert d["v"] > v0
+    assert d["anchors"] == {} and d["indexed_blocks"] == 0
+
+
+def test_radix_digest_top_k_by_blocks():
+    p = BlockPool(64, 32)
+    r = RadixIndex(p, 32)
+    for i, n in enumerate((5, 3, 1)):
+        sid = 10 + i
+        p.alloc(sid, n)
+        r.insert(_hashes(f"f{i}", n), p.lease(sid))
+    d = r.digest(top_k=2)
+    assert set(d["anchors"]) == {chunk_key_digest(("f0", 0)),
+                                 chunk_key_digest(("f1", 0))}
+    assert d["indexed_blocks"] == 9     # totals still index-wide
+
+
+def test_estimate_digest_match_bounded_by_depth_and_prefix():
+    p = BlockPool(32, 32)
+    r = RadixIndex(p, 32)
+    p.alloc(1, 4)
+    r.insert(_hashes("fam", 4), p.lease(1))
+    d = r.digest()
+    member = _hashes("fam", 2)           # shorter prefix than indexed chain
+    assert estimate_digest_match(d, member) == 2
+    longer = _hashes("fam", 8)
+    assert estimate_digest_match(d, longer) == 4   # capped by depth
+    assert estimate_digest_match(d, _hashes("other", 3)) == 0
+    assert estimate_digest_match(None, member) == 0
+    assert estimate_digest_match({}, member) == 0
 
 
 # ---------------------------------------------------------------------------
