@@ -2,8 +2,15 @@
 agent task whose tool callables REALLY run (sandboxed workspace: file edits,
 command execution, a task tracker) while the engine schedules LLM rounds.
 
-    PYTHONPATH=src python examples/agentic_serving.py
+    PYTHONPATH=src python examples/agentic_serving.py [--disk-tier]
+
+``--disk-tier`` enables the NVMe cold tier with a real-file spool: every
+tool yield parks its KV through the staged host->disk path (forced, so the
+tiny demo contexts exercise it) and restores promote back through host
+DRAM. Either way the per-tier occupancy / hit-rate breakdown prints at
+exit.
 """
+import argparse
 import os
 import shutil
 import subprocess
@@ -48,15 +55,44 @@ class Workspace:
         self.tracker.append(note)
 
 
+def _print_tier_breakdown(engine):
+    stats = engine.telem.kv_tier_stats()
+    for tier in ("host", "disk"):
+        t = stats.get(tier)
+        if t is None:
+            print(f"  {tier} tier: (off)")
+            continue
+        print(f"  {tier} tier: {t['used_blocks']}/{t['capacity_blocks']} "
+              f"blocks ({t['occupancy']:.0%}), stores={t['stores']} "
+              f"hit_rate={t['hit_rate']:.2f}")
+    print(f"  demotions={stats['demotions']} "
+          f"staged_restores={stats['staged_restores']} "
+          f"direct_to_disk={stats['direct_to_disk']}")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--disk-tier", action="store_true",
+                    help="enable the NVMe cold tier (real-file spool) and "
+                         "force the staged offload path at tool yields")
+    args = ap.parse_args()
+
     cfg = get_config("qwen2.5-3b").reduced()
-    backend = JaxBackend(cfg, max_slots=4, max_len=512)
+    spool = tempfile.mkdtemp(prefix="mars_spool_") if args.disk_tier else None
+    backend = JaxBackend(cfg, max_slots=4, max_len=512, disk_spool=spool)
     bus = EventBus()
     tools = RealToolExecutor(cpu_slots=2, bus=bus)
     engine = Engine(
         EngineConfig(total_kv_blocks=4 * 511 // 32, token_budget=256,
-                     max_decode_batch=4, decode_granularity=4, cpu_slots=2),
+                     max_decode_batch=4, decode_granularity=4, cpu_slots=2,
+                     disk_tier_blocks=(1024 if args.disk_tier else 0)),
         "mars", backend, bus=bus, tool_exec=tools)
+    if args.disk_tier:
+        # demo contexts are far below disk_min_tokens: force the staged
+        # path so the run really exercises spill -> promote -> restore
+        from repro.core.session import KVAction
+        engine.policy.on_tool_yield = \
+            lambda s, now: (KVAction.OFFLOAD_DISK, 0.0)
 
     root = tempfile.mkdtemp(prefix="mars_agents_")
     rng = np.random.default_rng(1)
@@ -92,9 +128,14 @@ def main():
             print(f"  task {s.sid}: e2e {s.e2e_latency:.2f}s, "
                   f"solution_written={os.path.exists(sol)}, "
                   f"tracker={ws.tracker}")
+        print("KV tier breakdown:")
+        _print_tier_breakdown(engine)
     finally:
         tools.shutdown()
+        backend.close()
         shutil.rmtree(root, ignore_errors=True)
+        if spool is not None:
+            shutil.rmtree(spool, ignore_errors=True)
 
 
 if __name__ == "__main__":

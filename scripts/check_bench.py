@@ -20,6 +20,12 @@ and the exit code gates CI — a perf regression fails the PR instead of
 waiting for a human to diff BENCH numbers. ``--update`` rewrites each
 check's ``baseline`` from the current rows (tolerances untouched) for
 intentional re-baselining; the diff still goes through review.
+
+Coverage is also enforced in the other direction: every ``figure`` that
+appears in the collected bench outputs must have at least one check in the
+baselines file. A brand-new bench wired into CI without a baseline entry
+therefore *fails* instead of silently passing — new benches must be
+baselined in the same PR that adds them.
 """
 from __future__ import annotations
 
@@ -75,6 +81,19 @@ def evaluate(check: dict, rows: List[dict]) -> Tuple[bool, str]:
     return True, f"{where}: {val} ok (baseline {check.get('baseline')})"
 
 
+def coverage_failures(spec: dict, rows: List[dict]) -> List[str]:
+    """Figures present in the bench outputs but absent from the baselines
+    — each is a gate hole (an unbaselined bench would silently pass)."""
+    checked = {c["figure"] for c in spec["checks"]}
+    emitted = {r.get("figure") for r in rows}
+    out = []
+    for fig in sorted(str(f) for f in emitted - checked):
+        out.append(f"figure {fig!r}: bench emits rows but baselines.json "
+                   f"has no check for it — baseline new benches in the "
+                   f"same PR")
+    return out
+
+
 def update_baselines(spec: dict, rows: List[dict], path: str) -> None:
     for check in spec["checks"]:
         row = find_row(rows, check["figure"], check["name"])
@@ -105,11 +124,17 @@ def main(argv=None) -> int:
         ok, detail = evaluate(check, rows)
         print(("PASS  " if ok else "FAIL  ") + detail)
         failures += 0 if ok else 1
+    uncovered = coverage_failures(spec, rows)
+    for detail in uncovered:
+        print("FAIL  " + detail)
+    failures += len(uncovered)
+    n_total = len(spec["checks"]) + len(uncovered)
     if failures:
-        print(f"\n{failures}/{len(spec['checks'])} bench checks failed "
+        print(f"\n{failures}/{n_total} bench checks failed "
               f"(see {args.baselines} for tolerances)", file=sys.stderr)
         return 1
-    print(f"\nall {len(spec['checks'])} bench checks passed")
+    print(f"\nall {len(spec['checks'])} bench checks passed "
+          f"({len({c['figure'] for c in spec['checks']})} figures covered)")
     return 0
 
 

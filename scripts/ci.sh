@@ -48,10 +48,11 @@ python benchmarks/kvcache_bench.py --dry --json "$BENCH_JSON_DIR/kvcache.json"
 python benchmarks/paged_runner_bench.py --dry --json "$BENCH_JSON_DIR/paged_runner.json"
 python benchmarks/swap_stream_bench.py --dry --json "$BENCH_JSON_DIR/swap_stream.json"
 python benchmarks/cross_replica_bench.py --dry --json "$BENCH_JSON_DIR/cross_replica.json"
-# the five fresh files are named explicitly — a glob would also pick up
+python benchmarks/tiered_store_bench.py --dry --json "$BENCH_JSON_DIR/tiered_store.json"
+# the six fresh files are named explicitly — a glob would also pick up
 # stale/quick-config rows persisting in an externally-supplied dir (e.g.
 # nightly's *-quick.json), and same-(figure,name) rows would shadow these
 python scripts/check_bench.py --baselines benchmarks/baselines.json \
     "$BENCH_JSON_DIR"/kernel.json "$BENCH_JSON_DIR"/kvcache.json \
     "$BENCH_JSON_DIR"/paged_runner.json "$BENCH_JSON_DIR"/swap_stream.json \
-    "$BENCH_JSON_DIR"/cross_replica.json
+    "$BENCH_JSON_DIR"/cross_replica.json "$BENCH_JSON_DIR"/tiered_store.json

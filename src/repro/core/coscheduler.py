@@ -46,6 +46,15 @@ class CoSchedulerConfig:
     enable_offload: bool = True
     offload_price: float = 0.5       # swap-out fraction charged (DMA/PCIe use)
     offload_min_tokens: int = 4_096  # tiny contexts: recompute is cheaper
+    # four-way retention (NVMe cold tier). Disk holds neither HBM nor DRAM
+    # but restores in two staged hops (NVMe read gates readiness, then the
+    # PCIe swap-in): it wins on long idle windows — CI runs, human waits —
+    # where parking the bytes in DRAM wastes the warmer tier's capacity.
+    enable_disk: bool = True
+    disk_price: float = 0.5          # staged write path fraction charged
+    disk_min_tokens: int = 8_192     # NVMe op latency: small contexts recompute
+    disk_idle_min_s: float = 45.0    # expected tool time beyond which DRAM
+    #                                  parking is wasteful and disk preferred
 
 
 class OpportunisticCoScheduler:
@@ -71,6 +80,10 @@ class OpportunisticCoScheduler:
         # compute and stops serializing a GPU tick — only the priced
         # DMA/PCIe occupancy share of the transfer remains a cost.
         self.swap_in_overlapped: bool = False
+        # NVMe cold-tier cost model, bound by the engine when the disk tier
+        # exists (None => three-way retention, no OFFLOAD_DISK outcome)
+        self.disk_read_seconds: Optional[Callable[[int], float]] = None
+        self.disk_write_seconds: Optional[Callable[[int], float]] = None
 
     # --- chunk shrinking ------------------------------------------------------
     def shrink_chunk(self, want_tokens: int, free_blocks: int) -> int:
@@ -149,24 +162,59 @@ class OpportunisticCoScheduler:
         benefit = self.recompute_time(s.resident_len) - serialized
         return benefit - self.cfg.offload_price * t_swap
 
+    def disk_net(self, s: Session, now: float) -> float:
+        """Net benefit (seconds) of parking this KV on the NVMe cold tier:
+        a warm (if slow) resume avoids the prefix recompute but pays the
+        *staged* two-hop restore — the NVMe read gates readiness (the
+        session waits it out, subtracted from the benefit) and the PCIe
+        swap-in serializes a tick unless the async stream overlaps it —
+        plus a priced share of the staged write path (D2H + NVMe write)
+        for DMA/device occupancy. Residency cost in both HBM *and* DRAM is
+        zero — that is what the cold tier buys."""
+        if (not self.cfg.enable_disk or self.disk_read_seconds is None
+                or self.swap_seconds is None
+                or s.resident_len < self.cfg.disk_min_tokens):
+            return float("-inf")
+        moved = (self.swap_tokens(s) if self.swap_tokens is not None
+                 else s.resident_len)
+        t_up = self.swap_seconds(moved)          # hop 2: DRAM -> HBM
+        t_read = self.disk_read_seconds(moved)   # hop 1: NVMe -> DRAM
+        serialized = 0.0 if self.swap_in_overlapped else t_up
+        benefit = self.recompute_time(s.resident_len) - serialized - t_read
+        t_write = self.disk_write_seconds(moved) + t_up
+        return benefit - self.cfg.disk_price * t_write
+
     def retention_decision(self, s: Session, now: float) -> KVAction:
-        """PIN / OFFLOAD / FREE by comparing recompute time, swap-in time,
-        and pressure-priced HBM residency (paper §4.3, extended). PIN wins
-        ties: under slack its residency cost vanishes while offload always
-        pays the PCIe round trip."""
+        """PIN / OFFLOAD (host) / OFFLOAD_DISK / FREE by comparing
+        recompute time, one-hop and staged two-hop restore time, and
+        pressure-priced HBM residency (paper §4.3, extended). PIN wins
+        ties: under slack its residency cost vanishes while any offload
+        pays a transfer. Between the off-device tiers, host DRAM wins
+        unless the expected idle window is long (``disk_idle_min_s`` of
+        EMA-estimated tool time) — heavy-tailed agentic tools (CI runs,
+        human-in-the-loop waits) are exactly where burning scarce DRAM on
+        a multi-minute wait loses to the cold tier."""
         pin_net = self.retention_score(s, now)
         off_net = self.offload_net(s, now)
-        if pin_net > 0.0 and pin_net >= off_net:
+        dsk_net = self.disk_net(s, now)
+        if pin_net > 0.0 and pin_net >= off_net and pin_net >= dsk_net:
             return KVAction.PIN
+        if dsk_net > 0.0:
+            long_idle = (self.telem is not None and
+                         self.telem.tool_estimate(s.cur.tool_kind)
+                         >= self.cfg.disk_idle_min_s)
+            if long_idle or off_net <= 0.0:
+                return KVAction.OFFLOAD_DISK
         if off_net > 0.0:
             return KVAction.OFFLOAD
         return KVAction.FREE
 
     def revoke_actions(self, pinned: Sequence[Session], now: float
                        ) -> List[Tuple[Session, KVAction]]:
-        """Per-tick re-evaluation, three-way: pins whose retention score went
-        negative are revoked — to host DRAM when the offload tier still nets
-        positive, to a drop otherwise."""
+        """Per-tick re-evaluation, four-way: pins whose retention score went
+        negative are revoked — to host DRAM (or the NVMe cold tier, on long
+        idle windows) while retention still nets positive, to a drop
+        otherwise."""
         out: List[Tuple[Session, KVAction]] = []
         for s in pinned:
             d = self.retention_decision(s, now)

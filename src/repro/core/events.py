@@ -30,6 +30,8 @@ UNPIN = "unpin"
 PREEMPT = "preempt"
 SWAP_OUT = "swap_out"
 SWAP_IN = "swap_in"
+DEMOTE = "demote"              # tiered store: host DRAM -> NVMe migration
+PROMOTE = "promote"            # tiered store: NVMe -> host DRAM (staged restore)
 PREFIX_HIT = "prefix_hit"      # cold prefill attached to shared radix blocks
 FINISH = "finish"
 

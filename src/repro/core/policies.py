@@ -44,21 +44,26 @@ class Policy:
         self.bus = bus
         self.oracle = oracle
         self.host_tier = None          # bound by the engine when tiered
+        self.disk_tier = None          # NVMe cold tier (four-way retention)
         self.swap_size_fn = None       # session -> (tokens, blocks) moved
         self.async_swap = False        # backend runs a background swap stream
         self.prefix_lookup = None      # session -> indexed prefix blocks
 
     def bind_services(self, host_tier=None, swap_size_fn=None,
-                      async_swap=False, prefix_lookup=None) -> None:
+                      async_swap=False, prefix_lookup=None,
+                      disk_tier=None) -> None:
         """Engine-owned KV services handed to the policy after
-        construction: the host-DRAM tier, the per-block offload sizing
-        (what would *actually* cross PCIe — radix-shared blocks stay on
-        device), whether the backend runs an async swap stream (swap-in
-        prefetch overlaps other sessions' compute, so restores stop
-        serializing GPU ticks), and the radix prefix lookup (session ->
-        blocks of its chunk-key prefix already indexed here, for
-        radix-aware admission sizing). Baselines ignore them."""
+        construction: the host-DRAM tier (the engine passes its
+        ``TieredStore``, which wears the same capacity/cost surface), the
+        per-block offload sizing (what would *actually* cross PCIe —
+        radix-shared blocks stay on device), whether the backend runs an
+        async swap stream (swap-in prefetch overlaps other sessions'
+        compute, so restores stop serializing GPU ticks), the radix prefix
+        lookup (session -> blocks of its chunk-key prefix already indexed
+        here, for radix-aware admission sizing), and the NVMe cold tier
+        (None => three-way retention). Baselines ignore them."""
         self.host_tier = host_tier
+        self.disk_tier = disk_tier
         self.swap_size_fn = swap_size_fn
         self.async_swap = async_swap
         self.prefix_lookup = prefix_lookup
@@ -206,9 +211,10 @@ class MARSPolicy(Policy):
             self.name = "mars-no-cosched"
 
     def bind_services(self, host_tier=None, swap_size_fn=None,
-                      async_swap=False, prefix_lookup=None) -> None:
+                      async_swap=False, prefix_lookup=None,
+                      disk_tier=None) -> None:
         super().bind_services(host_tier, swap_size_fn, async_swap,
-                              prefix_lookup)
+                              prefix_lookup, disk_tier)
         # radix-aware admission (Alg. 1 ext.): queue packing estimates
         # footprint net of the already-indexed shared prefix
         self.control.prefix_lookup = prefix_lookup
@@ -220,19 +226,50 @@ class MARSPolicy(Policy):
         # async stream: prefetched swap-ins overlap other sessions'
         # compute, so the restore no longer serializes a GPU tick
         self.cosched.swap_in_overlapped = bool(async_swap)
+        # NVMe cold tier: staged-restore pricing for the fourth outcome
+        self.cosched.disk_read_seconds = \
+            disk_tier.read_seconds if disk_tier is not None else None
+        self.cosched.disk_write_seconds = \
+            disk_tier.write_seconds if disk_tier is not None else None
+
+    def _sized_blocks(self, s: Session) -> int:
+        if self.swap_size_fn is not None:
+            # per-block offload: only private (non-shared) blocks occupy
+            # the tier — same sizing _offload_kv's can_store will apply
+            return self.swap_size_fn(s)[1]
+        # size with the tier's own block size (= engine block size), not
+        # cosched.block_size — they are configured independently and a
+        # drifted precheck would disagree with _offload_kv's can_store
+        return -(-s.resident_len // self.host_tier.block_size)
 
     def _host_can_take(self, s: Session) -> bool:
         if self.host_tier is None:
             return False
-        if self.swap_size_fn is not None:
-            # per-block offload: only private (non-shared) blocks occupy
-            # the tier — same sizing _offload_kv's can_store will apply
-            return self.host_tier.can_store(self.swap_size_fn(s)[1])
-        # size with the tier's own block size (= engine block size), not
-        # cosched.block_size — they are configured independently and a
-        # drifted precheck would disagree with _offload_kv's can_store
-        return self.host_tier.can_store(
-            -(-s.resident_len // self.host_tier.block_size))
+        return self.host_tier.can_store(self._sized_blocks(s))
+
+    def _disk_can_take(self, s: Session) -> bool:
+        if self.host_tier is None or self.disk_tier is None:
+            return False
+        return self.disk_tier.can_store(self._sized_blocks(s))
+
+    def _offload_fallback(self, s: Session, now: float,
+                          action: KVAction) -> KVAction:
+        """Capacity-checked tier choice: the preferred off-device tier
+        falls back to the other when full — but only if the other tier's
+        own net benefit is positive — and to FREE when neither works."""
+        if action == KVAction.OFFLOAD_DISK:
+            if self._disk_can_take(s):
+                return KVAction.OFFLOAD_DISK
+            if self.cosched.offload_net(s, now) > 0.0 \
+                    and self._host_can_take(s):
+                return KVAction.OFFLOAD        # warm tier as second choice
+        elif action == KVAction.OFFLOAD:
+            if self._host_can_take(s):
+                return KVAction.OFFLOAD
+            if self.cosched.disk_net(s, now) > 0.0 \
+                    and self._disk_can_take(s):
+                return KVAction.OFFLOAD_DISK   # DRAM full: cold tier still
+        return KVAction.FREE                   # beats recompute
 
     # external control plane
     def admit(self, queue, now):
@@ -258,15 +295,15 @@ class MARSPolicy(Policy):
                        if v.arrival_time > requester.arrival_time]
         return self.coord.eviction_order(victims, now)
 
-    # opportunistic co-scheduler (three-way adaptive retention, §4.3 ext.)
+    # opportunistic co-scheduler (four-way adaptive retention, §4.3 ext.)
     def on_tool_yield(self, s, now):
         if self.cfg.disable_coscheduler:
             return KVAction.FREE, 0.0
         action = self.cosched.retention_decision(s, now)
         if action == KVAction.PIN:
             return KVAction.PIN, float("inf")   # adaptive: revoked by ticks
-        if action == KVAction.OFFLOAD and self._host_can_take(s):
-            return KVAction.OFFLOAD, 0.0
+        if action in (KVAction.OFFLOAD, KVAction.OFFLOAD_DISK):
+            return self._offload_fallback(s, now, action), 0.0
         return KVAction.FREE, 0.0
 
     def revoke_actions(self, pinned, now):
@@ -274,8 +311,8 @@ class MARSPolicy(Policy):
             return [(s, KVAction.FREE) for s in pinned]
         out = []
         for s, action in self.cosched.revoke_actions(pinned, now):
-            if action == KVAction.OFFLOAD and not self._host_can_take(s):
-                action = KVAction.FREE
+            if action in (KVAction.OFFLOAD, KVAction.OFFLOAD_DISK):
+                action = self._offload_fallback(s, now, action)
             out.append((s, action))
         return out
 
@@ -285,10 +322,14 @@ class MARSPolicy(Policy):
         return self.cosched.reclaim_order(pinned, now)
 
     def reclaim_action(self, s, now):
-        """A pin reclaimed under pressure demotes to host DRAM when the
-        round trip still beats the recompute it would otherwise cause."""
+        """A pin reclaimed under pressure demotes to host DRAM (or the
+        NVMe cold tier when DRAM is full or the idle window is long) when
+        the restore still beats the recompute it would otherwise cause."""
         if self.cfg.disable_coscheduler:
             return KVAction.FREE
+        action = self.cosched.retention_decision(s, now)
+        if action in (KVAction.OFFLOAD, KVAction.OFFLOAD_DISK):
+            return self._offload_fallback(s, now, action)
         if self.cosched.offload_net(s, now) > 0.0 and self._host_can_take(s):
             return KVAction.OFFLOAD
         return KVAction.FREE

@@ -29,11 +29,13 @@ class KVState(enum.Enum):
 
 
 class KVAction(enum.Enum):
-    """Retention outcome at a tool boundary (three-way under MARS)."""
+    """Retention outcome at a tool boundary (four-way under MARS)."""
     FREE = "free"            # drop: rebuild by prefix recompute on resume
     PIN = "pin"              # retain in HBM across the tool phase
     SWAP = "swap"            # legacy host swap (InferCept's stock-vLLM path)
     OFFLOAD = "offload"      # tiered host-DRAM offload (kvcache.host_tier)
+    OFFLOAD_DISK = "offload_disk"  # cold NVMe tier (kvcache.disk_tier),
+    #                                staged two-hop restore via host DRAM
 
 
 @dataclass

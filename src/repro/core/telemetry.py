@@ -63,6 +63,9 @@ class Telemetry:
         self.host_used_blocks = 0
         self.offload_stores = 0
         self.offload_hits = 0
+        # tiered-store breakdown (kvcache.tiers): per-tier occupancy /
+        # hit-rate snapshot plus migration counters, None until probed
+        self.tier_stats: Optional[Dict] = None
         # cross-session prefix sharing (kvcache.radix)
         self.prefix_queries = 0
         self.prefix_hits = 0
@@ -131,6 +134,34 @@ class Telemetry:
         self.host_capacity_blocks = capacity_blocks
         self.offload_stores = stores
         self.offload_hits = hits
+
+    def probe_tiers(self, stats: Optional[Dict]) -> None:
+        """Snapshot of the TieredStore breakdown (see ``kvcache.tiers``):
+        per-tier occupancy, hit rates, demotions, staged restores."""
+        self.tier_stats = stats
+
+    def kv_tier_stats(self) -> Dict:
+        """Per-tier KV-state breakdown for dashboards and benchmarks:
+        occupancy, hit rate, demotions and staged restores per tier. Falls
+        back to the flat host-tier counters when no TieredStore probe has
+        landed (host-only or legacy configurations)."""
+        if self.tier_stats is not None:
+            return self.tier_stats
+        return {
+            "host": {
+                "used_blocks": self.host_used_blocks,
+                "capacity_blocks": self.host_capacity_blocks,
+                "occupancy": self.host_occupancy,
+                "stores": self.offload_stores,
+                "hits": self.offload_hits,
+                "hit_rate": round(self.offload_hit_rate, 4),
+                "drops": 0,
+            },
+            "disk": None,
+            "demotions": 0,
+            "staged_restores": 0,
+            "direct_to_disk": 0,
+        }
 
     def probe_prefix(self, queries: int, hits: int, hit_tokens: int) -> None:
         self.prefix_queries = queries

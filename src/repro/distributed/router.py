@@ -86,6 +86,7 @@ def _reset_kv_accounting(s: Session, engine=None, now: float = 0.0) -> None:
     s.kv_state = KVState.NONE
     s.meta.pop("swapped_len", None)
     s.meta.pop("host_tier", None)
+    s.meta.pop("kv_tier", None)
     # radix bookkeeping is per-replica: the new home's index knows nothing
     # of the chunks this session indexed (or attached to) on the old one
     # (prefix_anchor survives — it is workload identity, not replica state)

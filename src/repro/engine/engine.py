@@ -6,12 +6,14 @@ One ``tick`` is one engine iteration:
     2. O(1) block-pool + host-tier + backlog probe       -> telemetry
     3. external admission (policy.admit; MARS = Alg. 1);
        cold prefills attach to shared radix-indexed prefix blocks
-    4. pin re-evaluation (adaptive three-way retention / TTL expiry):
-       revoked pins drop or demote to the host-DRAM tier
+    4. pin re-evaluation (adaptive four-way retention / TTL expiry):
+       revoked pins drop, or demote to host DRAM or the NVMe cold tier;
+       tiered-store upkeep demotes cold host entries to NVMe
     5. batch formation: decodes first (priority order), then chunked
        prefills under the token budget; chunk shrinking; pinned KV is
        reclaimed (drop or offload) before any running victim is preempted;
-       completed host transfers drain back as swap-ins
+       completed host transfers drain back as swap-ins (NVMe entries
+       promote back through host DRAM first — the staged restore)
     6. backend.run_batch (sim: modeled seconds; jax: wall seconds)
     7. bookkeeping: TTFT per round, tool yields + retention decisions,
        completion accounting
@@ -21,7 +23,8 @@ only the backend, the tool executor, and the clock differ.
 
 KV capacity is governed by the tiered subsystem (``repro.kvcache``): a
 block-identity pool with refcounts/copy-on-write, a radix prefix index for
-cross-session sharing, and a host-DRAM offload tier.
+cross-session sharing, and a host-DRAM + NVMe offload hierarchy orchestrated
+by ``TieredStore``.
 """
 from __future__ import annotations
 
@@ -36,7 +39,8 @@ from repro.core.session import KVState, Phase, Round, Session
 from repro.core.telemetry import Telemetry, TelemetryConfig
 from repro.engine.backend import BatchWork
 from repro.engine.tools import SimToolExecutor
-from repro.kvcache import BlockPool, HostTier, HostTierConfig, RadixIndex
+from repro.kvcache import (BlockPool, DiskTier, DiskTierConfig, HostTier,
+                           HostTierConfig, RadixIndex, TieredStore)
 
 
 @dataclass
@@ -51,6 +55,15 @@ class EngineConfig:
     enable_prefix_sharing: bool = True  # radix index over prefix chunk hashes
     host_tier_blocks: int = -1        # host-DRAM tier capacity; -1 => 4x HBM
     host_pcie_bw: float = 24e9        # batched-DMA effective bytes/s
+    # NVMe cold tier (kvcache.disk_tier): 0 => off (three-way retention),
+    # -1 => 16x HBM. Requires a host tier (staged restores route through it).
+    disk_tier_blocks: int = 0
+    disk_read_bw: float = 3.5e9       # sequential read bytes/s
+    disk_write_bw: float = 1.8e9      # sustained sequential write bytes/s
+    disk_op_latency_s: float = 1e-4   # per-op NVMe latency
+    disk_queue_depth: int = 16        # concurrent modeled device ops
+    disk_demote_after_s: float = 30.0  # host entry idle time before demotable
+    disk_demote_watermark: float = 0.5  # host occupancy that starts demotion
 
     def __post_init__(self):
         if self.telem is None:
@@ -82,12 +95,38 @@ class Engine:
         host_blocks = (4 * cfg.total_kv_blocks if cfg.host_tier_blocks < 0
                        else cfg.host_tier_blocks)
         bpt_fn = getattr(backend, "kv_bytes_per_token", None)
+        bpt = bpt_fn() if bpt_fn else 64 * 1024
         self.host: Optional[HostTier] = (
             HostTier(HostTierConfig(capacity_blocks=host_blocks,
                                     pcie_bw=cfg.host_pcie_bw),
-                     bytes_per_token=(bpt_fn() if bpt_fn else 64 * 1024),
-                     block_size=cfg.block_size)
+                     bytes_per_token=bpt, block_size=cfg.block_size)
             if host_blocks > 0 else None)
+        # NVMe cold tier + the TieredStore orchestrator over host+disk.
+        # The engine always talks to the store (it delegates transparently
+        # when no disk tier is configured); `self.host`/`self.disk` stay
+        # exposed for tests and telemetry.
+        disk_blocks = (16 * cfg.total_kv_blocks if cfg.disk_tier_blocks < 0
+                       else cfg.disk_tier_blocks)
+        self.disk: Optional[DiskTier] = (
+            DiskTier(DiskTierConfig(capacity_blocks=disk_blocks,
+                                    read_bw=cfg.disk_read_bw,
+                                    write_bw=cfg.disk_write_bw,
+                                    op_latency_s=cfg.disk_op_latency_s,
+                                    queue_depth=cfg.disk_queue_depth),
+                     bytes_per_token=bpt, block_size=cfg.block_size)
+            if disk_blocks > 0 and self.host is not None else None)
+        self.tiers: Optional[TieredStore] = (
+            TieredStore(self.host, self.disk,
+                        recompute_time=backend.recompute_time,
+                        demote_after_s=cfg.disk_demote_after_s,
+                        demote_watermark=cfg.disk_demote_watermark,
+                        bus=self.bus)
+            if self.host is not None else None)
+        if self.tiers is not None and self.disk is not None:
+            spill = getattr(backend, "spill_host", None)
+            unspill = getattr(backend, "fill_host", None)
+            if spill is not None and unspill is not None:
+                self.tiers.bind_backend(spill=spill, unspill=unspill)
         self.telem = Telemetry(cfg.telem, self.bus)
         # async swap stream: the backend drains swap-outs and prefetches
         # swap-ins on a background worker; the engine then gates restores
@@ -98,12 +137,13 @@ class Engine:
                                         False))
         self.policy: Policy = make_policy(policy_name, self.telem, self.bus,
                                           backend, mars_cfg)
-        self.policy.bind_services(host_tier=self.host,
+        self.policy.bind_services(host_tier=self.tiers,
                                   swap_size_fn=self._private_swap_size,
                                   async_swap=self._async_swap,
                                   prefix_lookup=(self._indexed_prefix_blocks
                                                  if self.radix is not None
-                                                 else None))
+                                                 else None),
+                                  disk_tier=self.disk)
         self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
         self.waiting: List[Session] = []
         self.active: List[Session] = []
@@ -152,10 +192,10 @@ class Engine:
         ends and blocks free up."""
         ts = [s.pinned_since + s.pin_ttl for s in self.pinned
               if s.pin_ttl != float("inf")]
-        if self.host is not None:
-            t_host = self.host.next_event_time(now)
-            if t_host is not None:
-                ts.append(t_host)
+        if self.tiers is not None:
+            t_tier = self.tiers.next_event_time(now)
+            if t_tier is not None:
+                ts.append(t_tier)
         return min(ts) if ts else None
 
     def check_invariants(self) -> None:
@@ -188,18 +228,25 @@ class Engine:
             assert s.resident_len <= s.kv_blocks * self.cfg.block_size
         for s in self.finished:
             assert s.kv_blocks == 0 and s.phase == Phase.FINISHED
-        if self.host is not None:
+        if self.tiers is not None:
             tiered = [s for s in self.active
                       if s.kv_state == KVState.SWAPPED
                       and s.meta.get("host_tier")]
             for s in tiered:
-                assert self.host.holds(s.sid), f"lost host entry {s.sid}"
+                assert self.tiers.holds(s.sid), f"lost tier entry {s.sid}"
             want = sum(            # per-block offload: only private blocks
-                s.meta.get("host_blocks",      # occupy the host tier
+                s.meta.get("host_blocks",      # occupy the tiers
                            self.blocks.blocks_for(s.meta.get("swapped_len", 0)))
                 for s in tiered)
-            assert self.host.used_blocks == want, \
-                f"host occupancy: {self.host.used_blocks} != {want}"
+            used = self.host.used_blocks + \
+                (self.disk.used_blocks if self.disk is not None else 0)
+            assert used == want, \
+                f"tier occupancy: host+disk {used} != {want}"
+            assert self.host.used_blocks <= self.host.capacity_blocks, \
+                "host tier over capacity"
+            if self.disk is not None:
+                assert self.disk.used_blocks <= self.disk.capacity_blocks, \
+                    "disk tier over capacity"
 
     # ------------------------------------------------------------------
     def tick(self, now: float) -> Tuple[float, bool]:
@@ -238,19 +285,28 @@ class Engine:
                         and s.resident_len % self.cfg.block_size == 0
                         and self._attach_prefix(s, now)):
                     progressed = True
-        # 4. pin re-evaluation (three-way: keep / offload / drop)
+        # 4. pin re-evaluation (four-way: keep / offload / demote / drop)
         for s, action in list(self.policy.revoke_actions(self.pinned, now)):
             self._revoke_pin(s, now, action, reason="pin_revoked")
             progressed = True
+        # 4.5 tiered-store upkeep: demote cold host entries to NVMe by the
+        # net-benefit score; sessions already back from their tool are
+        # vetoed (demoting an entry about to restore would ping-pong)
+        if self.tiers is not None and self.disk is not None:
+            idle = {s.sid for s in self.active
+                    if s.phase == Phase.TOOL
+                    and s.kv_state == KVState.SWAPPED}
+            self.tiers.maintain(now, demotable=idle.__contains__)
         # 5-6. batch formation + execution
         work = self._form_batch(now)
         elapsed = self.backend.run_batch(work, now)
         # swap-completion handshake: bind the D2H drains the backend just
         # launched to their tier entries — from here on, ready() answers
-        # from the real transfer, not the modeled completion time
-        if self.host is not None and work.swap_futures:
+        # from the real transfer, not the modeled completion time (a
+        # direct-to-disk entry chains its spool write behind the drain)
+        if self.tiers is not None and work.swap_futures:
             for sid, fut in work.swap_futures.items():
-                self.host.attach_future(sid, fut)
+                self.tiers.attach_future(sid, fut)
         # 7. bookkeeping
         if not work.empty:
             self._apply(work, now, now + elapsed, elapsed)
@@ -273,6 +329,8 @@ class Engine:
             self.telem.probe_host(self.host.used_blocks,
                                   self.host.capacity_blocks,
                                   self.host.stores, self.host.hits)
+        if self.tiers is not None:
+            self.telem.probe_tiers(self.tiers.stats())
         if self.radix is not None:
             self.telem.probe_prefix(self.radix.queries, self.radix.hits,
                                     self.radix.hit_tokens)
@@ -420,26 +478,36 @@ class Engine:
         if m == len(hashes):
             s.meta["radix_inserted"] = True
 
-    def _offload_kv(self, s: Session, now: float) -> bool:
-        """Demote resident KV to the host-DRAM tier, *per block*: only
+    def _offload_kv(self, s: Session, now: float,
+                    target: str = "host") -> bool:
+        """Demote resident KV to the tiered store, *per block*: only
         private blocks (content lost at release) cross PCIe and occupy the
-        tier; shared/indexed prefix blocks stay physically on device and are
-        re-referenced at restore by their (bid, gen) certificate. Device
-        blocks free immediately; the (asynchronous) transfer of the private
-        suffix gates restorability."""
-        if self.host is None or s.kv_blocks <= 0:
+        target tier; shared/indexed prefix blocks stay physically on device
+        and are re-referenced at restore by their (bid, gen) certificate.
+        Device blocks free immediately; the (asynchronous) transfer of the
+        private suffix gates restorability. ``target="disk"`` routes the
+        entry straight to the NVMe cold tier (staged write: the D2H leg
+        stages through the stream's bounded buffers, then the spool write
+        lands — restores promote back through host DRAM)."""
+        if self.tiers is None or s.kv_blocks <= 0:
             return False
+        if target == "disk" and self.disk is None:
+            target = "host"
         rec, host_blocks, host_tokens = self._swap_record(s)
-        if not self.host.can_store(host_blocks):
+        can = (self.tiers.can_store_disk(host_blocks) if target == "disk"
+               else self.tiers.can_store(host_blocks))
+        if not can:
             return False
-        self.host.store(s.sid, host_tokens, host_blocks, now)
+        self.tiers.store(s.sid, host_tokens, host_blocks, now,
+                         target=target, context_tokens=s.resident_len)
         if self._async_swap:
             # the D2H drain is launched by run_batch next tick; until its
             # future is attached the entry must not look restorable (the
             # modeled ready_at may pass while nothing has been copied)
-            self.host.mark_in_flight(s.sid)
+            self.tiers.mark_in_flight(s.sid)
         s.meta["swapped_len"] = s.resident_len
         s.meta["host_tier"] = True
+        s.meta["kv_tier"] = target
         s.meta["swap_pages"] = rec
         s.meta["host_blocks"] = host_blocks
         s.meta["host_tokens"] = host_tokens
@@ -447,7 +515,7 @@ class Engine:
         freed = self.blocks.release_all(s.sid)
         assert freed == s.kv_blocks
         self.bus.emit(ev.SWAP_OUT, now, s.sid, blocks=s.kv_blocks,
-                      copied=host_blocks, tier="host")
+                      copied=host_blocks, tier=target)
         s.kv_blocks = 0
         s.resident_len = 0
         s.kv_state = KVState.SWAPPED
@@ -459,20 +527,22 @@ class Engine:
         if s in self.pinned:
             self.pinned.remove(s)
         s.kv_state = KVState.RESIDENT
-        if action == KVAction.OFFLOAD and self._offload_kv(s, now):
-            self.bus.emit(ev.UNPIN, now, s.sid, warm=False, to="host")
-        else:
-            self._release_kv(s, now, reason=reason)
+        if action in (KVAction.OFFLOAD, KVAction.OFFLOAD_DISK):
+            target = "disk" if action == KVAction.OFFLOAD_DISK else "host"
+            if self._offload_kv(s, now, target=target):
+                self.bus.emit(ev.UNPIN, now, s.sid, warm=False, to=target)
+                return
+        self._release_kv(s, now, reason=reason)
 
     def _drop_host_copy(self, s: Session) -> None:
         """Abandon host-side KV (recompute fallback / release): the tier
         entry if present, and the live backend's copy unconditionally —
         legacy-SWAP sessions also park K/V host-side via _swap_out and
         would otherwise leak it for the life of the server."""
-        if s.meta.pop("host_tier", None) and self.host is not None:
-            self.host.drop(s.sid)
+        if s.meta.pop("host_tier", None) and self.tiers is not None:
+            self.tiers.drop(s.sid)
         for k in ("swap_pages", "restore_positions", "host_blocks",
-                  "host_tokens", "swap_in_future", "swap_cost_s"):
+                  "host_tokens", "kv_tier", "swap_in_future", "swap_cost_s"):
             s.meta.pop(k, None)
         drop = getattr(self.backend, "drop_host", None)
         if drop is not None:
@@ -705,7 +775,7 @@ class Engine:
         if self._async_swap and (fut is None or fut.done()):
             s.meta["swap_cost_s"] = 0.0
         else:
-            s.meta["swap_cost_s"] = self.host.swap_seconds(
+            s.meta["swap_cost_s"] = self.tiers.swap_seconds(
                 s.meta.get("host_tokens", toks))
 
     def _abandon_swap(self, s: Session) -> None:
@@ -746,18 +816,28 @@ class Engine:
         reserve = 0 if allow_preempt else self._watermark()
         avail = max(0, self.blocks.free - reserve)
         if s.kv_state == KVState.SWAPPED:
-            tiered = bool(s.meta.get("host_tier")) and self.host is not None
-            if tiered and not self.host.ready(s.sid, now):
-                # swap-out still in flight: a modeled entry completes at a
-                # known future time (exported via next_timer_event), a
-                # future-gated one resolves on the background stream —
-                # waiting is strictly cheaper than abandoning to recompute
-                return False
-            if tiered and self._async_swap and self._swap_in_blocked(s, now):
+            tiered = bool(s.meta.get("host_tier")) and self.tiers is not None
+            if tiered:
+                # tier access: promotes a disk-resident entry back through
+                # host DRAM (staged first hop) on first request. False =>
+                # a transfer gates the restore: a modeled entry completes
+                # at a known future time (exported via next_timer_event),
+                # a future-gated one resolves on the background stream —
+                # waiting is strictly cheaper than abandoning to recompute.
+                # None => the restore can never proceed (entry lost, or a
+                # promotion starved of host capacity under the stall
+                # hatch): abandon to recompute.
+                r = self.tiers.request(s.sid, now, urgent=allow_preempt)
+                if r is None:
+                    self._abandon_swap(s)
+                elif not r:
+                    return False
+            if (s.kv_state == KVState.SWAPPED and tiered
+                    and self._async_swap and self._swap_in_blocked(s, now)):
                 return False
         if s.kv_state == KVState.SWAPPED:   # may have fallen to recompute
             toks = s.meta.get("swapped_len", 0)
-            tiered = bool(s.meta.get("host_tier")) and self.host is not None
+            tiered = bool(s.meta.get("host_tier")) and self.tiers is not None
             need = self.blocks.blocks_for(toks)
             if need <= avail or self._ensure_blocks(
                     need + reserve, now, in_batch, s, allow_preempt):
@@ -810,14 +890,19 @@ class Engine:
             s.resident_len = toks
             s.kv_state = KVState.RESIDENT
             s.meta["swapped_len"] = 0
+            origin = s.meta.pop("kv_tier", "host")
             for k in ("swap_pages", "restore_positions", "host_blocks",
                       "host_tokens", "swap_in_future",
                       "swap_cost_s"):        # consumed by run_batch above
                 s.meta.pop(k, None)
-            if s.meta.pop("host_tier", None) and self.host is not None:
-                self.host.load(s.sid, end)       # tier hit: occupancy freed
+            if s.meta.pop("host_tier", None) and self.tiers is not None:
+                # tier hit: occupancy freed. None (hardened sentinel) means
+                # the entry vanished between batch formation and commit
+                # (detach race) — the restore already executed from the
+                # snapshot, so only the hit accounting is skipped.
+                loaded = self.tiers.load(s.sid, end)
                 self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,
-                              tier="host")
+                              tier=origin, accounted=loaded is not None)
             else:
                 self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks)
             if s.pending_prefill <= 0:
@@ -863,8 +948,9 @@ class Engine:
             self.finished.append(s)
             self.bus.emit(ev.FINISH, now, s.sid, latency=s.e2e_latency)
             return
-        # yield to tool; retention decision (three-way under MARS:
-        # PIN keeps HBM, OFFLOAD demotes to host DRAM, FREE recomputes)
+        # yield to tool; retention decision (four-way under MARS: PIN keeps
+        # HBM, OFFLOAD parks in host DRAM, OFFLOAD_DISK parks on NVMe with
+        # a staged two-hop restore, FREE recomputes)
         r = s.cur
         action, ttl = self.policy.on_tool_yield(s, now)
         if action == KVAction.PIN and s.kv_blocks > 0:
@@ -889,8 +975,12 @@ class Engine:
             s.kv_blocks = 0
             s.resident_len = 0
             s.kv_state = KVState.SWAPPED
-        elif (action == KVAction.OFFLOAD and s.kv_blocks > 0
-              and self._offload_kv(s, now)):
+        elif (action in (KVAction.OFFLOAD, KVAction.OFFLOAD_DISK)
+              and s.kv_blocks > 0
+              and self._offload_kv(s, now,
+                                   target=("disk"
+                                           if action == KVAction.OFFLOAD_DISK
+                                           else "host"))):
             pass
         else:
             self._release_kv(s, now, reason="tool_free")

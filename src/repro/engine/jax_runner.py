@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.session import Session
 from repro.engine.backend import BatchWork
+from repro.kvcache.disk_tier import DiskFileStore
 from repro.kvcache.pool import DeviceBindingMap
 from repro.kvcache.swap_stream import (SwapStream, TransferFuture,
                                        resolved_future)
@@ -66,7 +67,8 @@ class JaxBackend:
     def __init__(self, cfg: ModelConfig, *, layout: str = "paged",
                  max_slots: int = 8, max_len: int = 1024,
                  total_pages: Optional[int] = None, page_size: int = 32,
-                 seed: int = 0, dtype=jnp.float32, async_swap: bool = True):
+                 seed: int = 0, dtype=jnp.float32, async_swap: bool = True,
+                 disk_spool: Optional[str] = None):
         assert cfg.family in ("dense", "moe"), "live runner serves LM families"
         assert layout in ("paged", "dense")
         if layout == "paged" and not supports_paged(cfg):
@@ -82,7 +84,8 @@ class JaxBackend:
                 total_pages = max(1, max_slots * max_len // page_size)
             self._impl: "_CacheLayout" = _PagedLayout(self, total_pages,
                                                       page_size,
-                                                      async_swap=async_swap)
+                                                      async_swap=async_swap,
+                                                      disk_spool=disk_spool)
         else:
             self._impl = _DenseLayout(self)
         # prefix sharing needs placement to follow block ids physically;
@@ -116,6 +119,17 @@ class JaxBackend:
         engine defers the session until the returned future resolves, so
         the transfer overlaps the other sessions' compute."""
         return self._impl.prefetch_swap_in(sid)
+
+    def spill_host(self, sid: int) -> Optional[TransferFuture]:
+        """NVMe demotion data plane: write ``sid``'s host KV copy to the
+        spool directory (freeing the DRAM copy) on the background stream.
+        The TieredStore gates the disk entry on the returned future."""
+        return self._impl.spill_host(sid)
+
+    def fill_host(self, sid: int) -> Optional[TransferFuture]:
+        """NVMe promotion data plane: read ``sid``'s spool file back into
+        the host copy ahead of the PCIe swap-in."""
+        return self._impl.fill_host(sid)
 
     def close(self) -> None:
         """Stop the background swap stream (benchmarks create several
@@ -216,6 +230,10 @@ class _CacheLayout:
     def swap_in(self, s: Session, lease) -> None: ...
     def prefetch_swap_in(self, sid: int) -> Optional[TransferFuture]:
         return None
+    def spill_host(self, sid: int) -> Optional[TransferFuture]:
+        return None           # layouts without an NVMe data plane: modeled
+    def fill_host(self, sid: int) -> Optional[TransferFuture]:
+        return None
     def apply_cow(self, copies) -> None: ...
     def prefill(self, s: Session, chunk: int, lease) -> None: ...
     def decodes(self, decodes, leases) -> None: ...
@@ -234,10 +252,14 @@ class _PagedLayout(_CacheLayout):
     """
 
     def __init__(self, backend: JaxBackend, total_pages: int, page: int,
-                 async_swap: bool = True):
+                 async_swap: bool = True, disk_spool: Optional[str] = None):
         self.b = backend
         self.page = page
         self.total_pages = total_pages
+        # NVMe spill data plane (kvcache.disk_tier.DiskFileStore), created
+        # lazily on the first spill so host-only runs never touch disk
+        self._spool_dir = disk_spool
+        self._filestore: Optional[DiskFileStore] = None
         self.binding = DeviceBindingMap(total_pages)
         self.scratch = self.binding.scratch_page
         cfg, dtype = backend.cfg, backend.dtype
@@ -350,10 +372,73 @@ class _PagedLayout(_CacheLayout):
             self._d2h.pop(sid, None)
             if self.stream is not None:
                 self._dropped.add(sid)   # in-flight jobs must not resurrect
+        if self._filestore is not None:
+            self._filestore.delete(sid)
 
     def close(self) -> None:
         if self.stream is not None:
             self.stream.close()
+        if self._filestore is not None:
+            self._filestore.close()
+            self._filestore = None
+
+    # --- NVMe spill/fill (TieredStore data plane) -------------------------
+    def _store(self) -> DiskFileStore:
+        if self._filestore is None:
+            self._filestore = DiskFileStore(self._spool_dir)
+        return self._filestore
+
+    def spill_host(self, sid: int) -> Optional[TransferFuture]:
+        """Write ``sid``'s host KV copy to the spool and free the DRAM
+        copy. Submitted on the stream when one runs (FIFO: a demotion
+        chained behind this tick's D2H drain lands after the bytes do);
+        synchronous otherwise. Empty records (nothing private crossed
+        PCIe) keep their (None, None) marker in DRAM — there is nothing
+        to free and the restore path expects the marker."""
+        store = self._store()
+
+        def write() -> bool:
+            with self._mu:
+                if self.stream is not None and sid in self._dropped:
+                    return False
+                host = self._host.get(sid)
+            if host is None or host[0] is None:
+                return False           # nothing private: marker stays
+            store.write(sid, host[0], host[1])
+            with self._mu:
+                if self.stream is not None and sid in self._dropped:
+                    store.delete(sid)  # raced a detach: no resurrection
+                    return False
+                self._host.pop(sid, None)
+            return True
+
+        if self.stream is None:
+            write()
+            return None
+        return self.stream.submit(write, sid=sid, direction="h2n")
+
+    def fill_host(self, sid: int) -> Optional[TransferFuture]:
+        """Read ``sid``'s spool file back into the host copy (promotion
+        first hop); the engine's normal prefetch/swap-in path then moves
+        it over PCIe."""
+        store = self._store()
+
+        def read() -> bool:
+            data = store.read(sid)
+            if data is None:
+                return False           # empty record: marker never spilled
+            with self._mu:
+                if self.stream is not None and sid in self._dropped:
+                    store.delete(sid)
+                    return False
+                self._host[sid] = data
+            store.delete(sid)
+            return True
+
+        if self.stream is None:
+            read()
+            return None
+        return self.stream.submit(read, sid=sid, direction="n2h")
 
     # --- swap: per-block host offload -------------------------------------
     def swap_out(self, s: Session) -> Optional[TransferFuture]:

@@ -25,7 +25,7 @@ regions, on the background stream when the backend runs one.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 
 @dataclass
@@ -150,9 +150,21 @@ class HostTier:
             return 0.0 if e.future.done() else None
         return max(0.0, e.ready_at - now)
 
-    def load(self, sid: int, now: float) -> int:
-        """Swap-in completed: release host capacity, count the hit."""
-        e = self._entries.pop(sid)
+    def load(self, sid: int, now: float) -> Optional[int]:
+        """Swap-in completed: release host capacity, count the hit.
+
+        Hardened to match ``drop``'s tolerance: an unknown sid (entry
+        already dropped/detached between batch formation and commit) or a
+        still-in-flight one (future-gated transfer unresolved — the bytes
+        are not in host memory) returns the None sentinel for the caller
+        to handle instead of KeyError-ing the engine; the in-flight entry
+        is retained so the transfer can still land."""
+        e = self._entries.get(sid)
+        if e is None:
+            return None
+        if e.future is not None and not e.future.done():
+            return None
+        del self._entries[sid]
         self._used -= e.blocks
         self.hits += 1
         self.bytes_moved += e.tokens * self.bytes_per_token
@@ -164,6 +176,35 @@ class HostTier:
         if e is not None:
             self._used -= e.blocks
             self.drops += 1
+
+    # --- tier migration (TieredStore) -----------------------------------
+    def peek(self, sid: int) -> Optional[Tuple[int, int]]:
+        """(tokens, blocks) of an entry without consuming it; None when
+        unknown."""
+        e = self._entries.get(sid)
+        return None if e is None else (e.tokens, e.blocks)
+
+    def evacuate(self, sid: int) -> Optional[Tuple[int, int]]:
+        """Remove an entry for tier migration *without* counting a drop or
+        a hit (the bytes move tiers, the retention outcome is still open);
+        returns (tokens, blocks) or None for unknown sids."""
+        e = self._entries.pop(sid, None)
+        if e is None:
+            return None
+        self._used -= e.blocks
+        return e.tokens, e.blocks
+
+    def admit_staged(self, sid: int, tokens: int, blocks: int, now: float,
+                     *, transfer_s: float, future=None) -> None:
+        """Register an entry arriving from another tier (NVMe promotion):
+        restorable after ``transfer_s`` on the sim clock, or — live path —
+        when ``future`` (the file-read job) resolves. Counts a store, so
+        ``hit_rate`` stays entries-restored / entries-registered."""
+        assert sid not in self._entries, f"double admit of sid {sid}"
+        self._entries[sid] = _Entry(tokens, blocks, now + transfer_s, future)
+        self._used += blocks
+        self.stores += 1
+        self.bytes_moved += tokens * self.bytes_per_token
 
     def next_event_time(self, now: float) -> Optional[float]:
         """Earliest in-flight *modeled* transfer completion after ``now`` —

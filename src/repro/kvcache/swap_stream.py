@@ -140,25 +140,30 @@ class SwapStream:
         self._started = False
         self._closed = False
         self._lock = threading.Lock()
-        # stats (benchmark / tests)
+        # stats (benchmark / tests); h2n/n2h are the NVMe tier's
+        # spill/fill crossings (host DRAM <-> disk spool)
         self.d2h_submitted = 0
         self.d2h_completed = 0
         self.h2d_submitted = 0
         self.h2d_completed = 0
+        self.h2n_submitted = 0
+        self.h2n_completed = 0
+        self.n2h_submitted = 0
+        self.n2h_completed = 0
+
+    DIRECTIONS = ("d2h", "h2d", "h2n", "n2h")
 
     def submit(self, fn: Callable[[], object], *, sid: int = -1,
                direction: str = "d2h") -> TransferFuture:
         """Enqueue ``fn`` on the worker; returns its completion future.
         ``fn`` owns releasing any staging slot it (or its submitter)
         acquired — the stream never sees slots, only jobs."""
-        assert direction in ("d2h", "h2d")
+        assert direction in self.DIRECTIONS
         fut = TransferFuture(sid, direction)
         with self._lock:
             assert not self._closed, "submit on a closed SwapStream"
-            if direction == "d2h":
-                self.d2h_submitted += 1
-            else:
-                self.h2d_submitted += 1
+            setattr(self, f"{direction}_submitted",
+                    getattr(self, f"{direction}_submitted") + 1)
             if not self._started:
                 self._thread.start()
                 self._started = True
@@ -175,10 +180,9 @@ class SwapStream:
                 value = fn()
                 # count before resolving: a consumer woken by result()
                 # must never observe a stale completion counter
-                if fut.direction == "d2h":
-                    self.d2h_completed += 1
-                elif fut.direction == "h2d":
-                    self.h2d_completed += 1
+                if fut.direction in self.DIRECTIONS:
+                    setattr(self, f"{fut.direction}_completed",
+                            getattr(self, f"{fut.direction}_completed") + 1)
                 fut._resolve(value)
             except BaseException as exc:          # surfaces at result()
                 fut._fail(exc)

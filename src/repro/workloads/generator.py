@@ -53,6 +53,18 @@ TOOL_KINDS = {
     "test_runner": (0.45, 15.0, 0.7, 300.0, 0.8),
 }
 
+# Long-idle kinds (opt-in via ``WorkloadSpec.tool_mix`` — NOT part of the
+# default draw, which must stay byte-stable for seeded baselines): CI
+# pipelines and human-in-the-loop waits, the heavy-tailed multi-minute idle
+# windows where host DRAM fills with parked KV and the NVMe cold tier pays
+# for itself (Astraea's state-aware scheduling observes the same structure).
+LONG_TOOL_KINDS = {
+    "ci_runner": (0.15, 45.0, 0.6, 600.0, 0.7),
+    "human_review": (0.10, 90.0, 0.8, 1500.0, 0.9),
+}
+
+ALL_TOOL_KINDS = {**TOOL_KINDS, **LONG_TOOL_KINDS}
+
 
 @dataclass
 class WorkloadSpec:
@@ -72,6 +84,10 @@ class WorkloadSpec:
     shared_frac: float = 0.7           # family-shared share of round-0 ctx
     dup_frac: float = 0.1              # P(member duplicates canonical round 0)
     chunk_tokens: int = 32             # prefix-hash granularity (= block size)
+    # tool-kind mix: {kind: weight} over ALL_TOOL_KINDS (long-idle kinds
+    # included). None keeps the legacy uniform draw over TOOL_KINDS —
+    # byte-identical RNG consumption for existing seeded workloads.
+    tool_mix: Optional[Dict[str, float]] = None
 
 
 def _lognormal(rng, mean: float, sigma: float) -> float:
@@ -104,7 +120,20 @@ def _chunk_keys(wl, fid: int, useed, shared_len: int, total_len: int,
 def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
              tp: int = 1) -> List[Session]:
     rng = np.random.default_rng(spec.seed)
-    wl = astuple(spec)       # workload identity baked into prefix-hash keys
+    # workload identity baked into prefix-hash keys; dict fields flatten to
+    # sorted item tuples so the identity stays hashable
+    wl = tuple(tuple(sorted(x.items())) if isinstance(x, dict) else x
+               for x in astuple(spec))
+    mix_kinds = mix_probs = None
+    if spec.tool_mix:
+        unknown = set(spec.tool_mix) - set(ALL_TOOL_KINDS)
+        assert not unknown, f"unknown tool kinds in tool_mix: {unknown}"
+        assert all(w >= 0 for w in spec.tool_mix.values()), \
+            f"negative tool_mix weights: {spec.tool_mix}"
+        mix_kinds = sorted(spec.tool_mix)
+        total_w = sum(spec.tool_mix[k] for k in mix_kinds)
+        assert total_w > 0, f"tool_mix weights sum to zero: {spec.tool_mix}"
+        mix_probs = [spec.tool_mix[k] / total_w for k in mix_kinds]
     mean_prompt = ILR_MEAN_PROMPT[spec.regime]
     sessions: List[Session] = []
     # family-level canonical draws: shared repository-context size and the
@@ -145,8 +174,11 @@ def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
         for r in range(n_rounds):
             dec = int(np.clip(_lognormal(rng, spec.decode_mean, 0.6), 24, 1200))
             if r < n_rounds - 1:
-                kind = str(rng.choice(list(TOOL_KINDS)))
-                p_short, m_s, sg_s, m_l, sg_l = TOOL_KINDS[kind]
+                if mix_kinds is not None:
+                    kind = str(rng.choice(mix_kinds, p=mix_probs))
+                else:
+                    kind = str(rng.choice(list(TOOL_KINDS)))
+                p_short, m_s, sg_s, m_l, sg_l = ALL_TOOL_KINDS[kind]
                 if rng.random() < p_short:
                     dur = _lognormal(rng, m_s, sg_s)
                 else:

@@ -1,0 +1,61 @@
+"""Bench-regression gate tests: the figure-coverage rule (a bench that
+emits rows without any baselines entry must FAIL the gate, not silently
+pass) plus the committed baselines file staying in sync with the figures
+the CI smokes actually emit."""
+import importlib.util
+import json
+import os
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(REPO, "scripts", "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _spec_with(figures):
+    return {"checks": [{"figure": f, "name": "x", "field": "v",
+                        "baseline": 1, "min": 0} for f in figures]}
+
+
+def test_uncovered_figure_fails_the_gate(tmp_path):
+    out = tmp_path / "bench.json"
+    out.write_text(json.dumps({"rows": [
+        {"figure": "covered", "name": "x", "v": 1},
+        {"figure": "brand_new_bench", "name": "y", "v": 2},
+    ]}))
+    spec_path = tmp_path / "baselines.json"
+    spec_path.write_text(json.dumps(_spec_with(["covered"])))
+    rc = check_bench.main([str(out), "--baselines", str(spec_path)])
+    assert rc == 1
+
+
+def test_covered_figures_pass(tmp_path):
+    out = tmp_path / "bench.json"
+    out.write_text(json.dumps({"rows": [
+        {"figure": "covered", "name": "x", "v": 1},
+        {"figure": "covered", "name": "extra_row", "v": 9},  # rows beyond
+    ]}))                                  # the checked one stay allowed
+    spec_path = tmp_path / "baselines.json"
+    spec_path.write_text(json.dumps(_spec_with(["covered"])))
+    rc = check_bench.main([str(out), "--baselines", str(spec_path)])
+    assert rc == 0
+
+
+def test_coverage_failures_lists_each_missing_figure():
+    rows = [{"figure": "a"}, {"figure": "b"}, {"figure": "b"}]
+    out = check_bench.coverage_failures(_spec_with(["a"]), rows)
+    assert len(out) == 1 and "'b'" in out[0]
+    assert check_bench.coverage_failures(_spec_with(["a", "b"]), rows) == []
+
+
+def test_committed_baselines_cover_every_ci_smoke_figure():
+    """Every figure the six CI dry smokes emit has at least one committed
+    check — the coverage rule holds on the real pipeline config."""
+    with open(os.path.join(REPO, "benchmarks", "baselines.json")) as f:
+        spec = json.load(f)
+    checked = {c["figure"] for c in spec["checks"]}
+    # one figure per bench wired into scripts/ci.sh
+    assert {"kernels", "kvcache", "paged_runner", "swap_stream",
+            "cross_replica", "tiered_store"} <= checked

@@ -1,0 +1,558 @@
+"""NVMe third tier + TieredStore tests: disk cost model (per-op latency,
+bandwidth asymmetry, bounded queue depth), real-file spool round trips, the
+hardened ``HostTier.load`` sentinel, staged demotion/promotion with future
+gating, four-way retention decisions, the engine's end-to-end disk round
+trip, a property/soak test over random store/demote/promote/drop/detach
+sequences holding the occupancy invariants, and live (paged runner) token
+parity for the staged restore path."""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # hermetic env: seeded-example fallback
+    from _hypo import given, settings, st
+
+from repro.configs.qwen3_coder_30b import CONFIG as QWEN3
+from repro.core import events as ev
+from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler
+from repro.core.session import KVAction, KVState, Phase, Round, make_session
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig, run_sim
+from repro.kvcache import (DiskFileStore, DiskTier, DiskTierConfig, HostTier,
+                           HostTierConfig, TieredStore)
+from repro.models.perf_model import H100
+
+BACKEND = SimBackend(QWEN3, H100)
+
+
+def _host(cap=100):
+    return HostTier(HostTierConfig(capacity_blocks=cap, pcie_bw=1e9,
+                                   base_latency_s=1e-3),
+                    bytes_per_token=1e6, block_size=32)
+
+
+def _disk(cap=1000, qd=2):
+    return DiskTier(DiskTierConfig(capacity_blocks=cap, read_bw=1e9,
+                                   write_bw=5e8, op_latency_s=1e-2,
+                                   queue_depth=qd),
+                    bytes_per_token=1e6, block_size=32)
+
+
+class _Fut:
+    def __init__(self, done=False):
+        self._done = done
+
+    def done(self):
+        return self._done
+
+    def resolve(self):
+        self._done = True
+
+
+# ---------------------------------------------------------------------------
+# disk tier: cost model + occupancy
+# ---------------------------------------------------------------------------
+
+def test_disk_cost_model_latency_and_bandwidth_asymmetry():
+    d = _disk()
+    assert d.read_seconds(0) == 0.0
+    # per-op latency + bytes/bw; write bw half the read bw
+    assert d.read_seconds(100) == pytest.approx(1e-2 + 0.1)
+    assert d.write_seconds(100) == pytest.approx(1e-2 + 0.2)
+
+
+def test_disk_bounded_queue_depth_backpressures():
+    d = _disk(qd=2)
+    svc = d.write_seconds(100)           # 0.21 s per op
+    # 4 concurrent writes through a depth-2 queue: the 3rd and 4th wait
+    secs = [d.store(i, tokens=100, blocks=1, now=0.0) for i in range(4)]
+    assert secs[0] == pytest.approx(svc)
+    assert secs[1] == pytest.approx(svc)
+    assert secs[2] == pytest.approx(2 * svc)
+    assert secs[3] == pytest.approx(2 * svc)
+    assert d.used_blocks == 4
+    assert not d.ready(3, now=1.9 * svc)
+    assert d.ready(3, now=2 * svc + 1e-9)
+
+
+def test_disk_occupancy_load_drop_and_sentinels():
+    d = _disk(cap=4)
+    assert d.can_store(4) and not d.can_store(5)
+    d.store(1, tokens=50, blocks=3, now=0.0)
+    assert d.load(99, now=1.0) is None           # unknown: sentinel
+    d.mark_in_flight(1)
+    assert d.load(1, now=1e9) is None            # in flight: sentinel, kept
+    assert d.holds(1) and d.used_blocks == 3
+    fut = _Fut()
+    d.attach_future(1, fut)
+    assert not d.ready(1, 1e9) and d.time_to_ready(1, 0.0) is None
+    assert d.next_event_time(0.0) is None        # wall clock, not sim timer
+    fut.resolve()
+    assert d.ready(1, 0.0)
+    assert d.load(1, now=2.0) == 50
+    assert d.used_blocks == 0 and d.hits == 1
+    d.drop(1)                                    # tolerated no-op
+    assert d.drops == 0
+
+
+def test_disk_file_store_round_trip(tmp_path):
+    fs = DiskFileStore(str(tmp_path))
+    k = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    v = -k
+    fs.write(7, k, v)
+    rk, rv = fs.read(7)
+    np.testing.assert_array_equal(rk, k)
+    np.testing.assert_array_equal(rv, v)
+    assert fs.read(8) is None
+    fs.delete(7)
+    assert fs.read(7) is None
+    fs.delete(7)                                 # idempotent
+
+
+# ---------------------------------------------------------------------------
+# host tier: hardened load (regression) + migration hooks
+# ---------------------------------------------------------------------------
+
+def test_host_load_unknown_and_inflight_return_sentinel():
+    """Regression: ``load`` must match ``drop`` semantics — an unknown or
+    in-flight sid returns None instead of KeyError-ing the engine, and an
+    in-flight entry is retained for the transfer to land."""
+    ht = _host()
+    assert ht.load(404, now=0.0) is None         # unknown: no KeyError
+    ht.store(5, tokens=100, blocks=4, now=0.0)
+    ht.mark_in_flight(5)
+    assert ht.load(5, now=1e9) is None           # in flight: sentinel
+    assert ht.holds(5) and ht.used_blocks == 4   # ...entry retained
+    fut = _Fut(done=True)
+    ht.attach_future(5, fut)
+    assert ht.load(5, now=0.0) == 100
+    assert ht.used_blocks == 0 and ht.hits == 1
+
+
+def test_host_evacuate_and_admit_staged():
+    ht = _host()
+    ht.store(1, tokens=100, blocks=4, now=0.0)
+    assert ht.evacuate(1) == (100, 4)
+    assert ht.used_blocks == 0 and ht.drops == 0 and ht.hits == 0
+    assert ht.evacuate(1) is None
+    ht.admit_staged(2, 60, 2, now=5.0, transfer_s=1.0)
+    assert ht.used_blocks == 2 and ht.stores == 2
+    assert not ht.ready(2, 5.5) and ht.ready(2, 6.0)
+
+
+# ---------------------------------------------------------------------------
+# TieredStore: staged moves
+# ---------------------------------------------------------------------------
+
+def test_direct_to_disk_staged_write_then_promote_on_request():
+    ts = TieredStore(_host(), _disk())
+    sec = ts.store(1, tokens=100, blocks=4, now=0.0, target="disk",
+                   context_tokens=200)
+    # staged: PCIe D2H leg + NVMe write (through the queue)
+    want = ts.host.swap_seconds(100) + ts.disk.write_seconds(100)
+    assert sec == pytest.approx(want)
+    assert ts.tier_of(1) == "disk" and ts.disk.used_blocks == 4
+    assert ts.host.used_blocks == 0
+    # not restorable directly, and not promoted while the write lands
+    assert not ts.ready(1, now=0.0)
+    # staged estimate: durable-time remainder + unqueued read
+    assert ts.time_to_ready(1, now=0.0) == \
+        pytest.approx(sec + ts.disk.read_seconds(100))
+    assert ts.time_to_ready(404, now=0.0) is None
+    assert ts.request(1, now=sec / 2) is False
+    # first request after durability issues the promotion (hop 1)
+    r = ts.request(1, now=sec)
+    assert r is False and ts.tier_of(1) == "host"
+    assert ts.staged_restores == 1 and ts.disk.hits == 1
+    assert ts.disk.used_blocks == 0 and ts.host.used_blocks == 4
+    t_read = ts.disk.read_seconds(100)
+    assert ts.request(1, now=sec + t_read) is True
+    assert ts.load(1, now=sec + t_read) == 100
+    assert ts.host.used_blocks == 0 and ts.host.hits == 1
+
+
+def test_demotion_gates_cold_watermark_benefit_and_inflight():
+    host = _host(cap=10)
+    # recompute barely more expensive than the staged restore: worth disk
+    ts = TieredStore(host, _disk(), recompute_time=lambda n: 1e3,
+                     demote_after_s=10.0, demote_watermark=0.5)
+    ts.store(1, tokens=100, blocks=4, now=0.0)
+    ts.store(2, tokens=100, blocks=4, now=5.0)
+    ts.mark_in_flight(2)                   # D2H never resolved: not in DRAM
+    # occupancy 8/10 > watermark, but nothing cold yet
+    assert ts.maintain(now=9.0) == 0
+    # sid 1 cold at t=12; sid 2 in flight -> must never demote
+    assert ts.maintain(now=12.0) == 1
+    assert ts.tier_of(1) == "disk" and ts.tier_of(2) == "host"
+    assert ts.demotions == 1
+    assert ts.maintain(now=30.0) == 0      # sid 2 still future-gated
+    # cheap recompute: demotion not worth it
+    ts2 = TieredStore(_host(cap=10), _disk(), recompute_time=lambda n: 1e-6,
+                      demote_after_s=1.0, demote_watermark=0.0)
+    ts2.store(1, tokens=100, blocks=8, now=0.0)
+    assert ts2.maintain(now=100.0) == 0
+    # demotable veto (engine: session already back from its tool)
+    ts3 = TieredStore(_host(cap=10), _disk(), recompute_time=lambda n: 1e3,
+                      demote_after_s=1.0, demote_watermark=0.0)
+    ts3.store(1, tokens=100, blocks=8, now=0.0)
+    assert ts3.maintain(now=100.0, demotable=lambda sid: False) == 0
+    assert ts3.maintain(now=100.0, demotable=lambda sid: True) == 1
+
+
+def test_promotion_displaces_cold_entries_when_host_full():
+    host = _host(cap=8)
+    ts = TieredStore(host, _disk(), recompute_time=lambda n: 1e3,
+                     demote_after_s=1e9,   # never age-demoted
+                     demote_watermark=1.0)
+    ts.store(1, tokens=100, blocks=6, now=0.0, target="disk")
+    ts.store(2, tokens=100, blocks=6, now=0.0)     # host-resident, ready
+    now = 10.0
+    assert ts.disk.ready(1, now)
+    # promoting sid 1 needs 6 blocks; host has 2 free -> sid 2 demoted
+    r = ts.request(1, now=now)
+    assert r is False and ts.tier_of(1) == "host" and ts.tier_of(2) == "disk"
+    assert ts.demotions == 1 and ts.staged_restores == 1
+    assert ts.host.used_blocks == 6 and ts.disk.used_blocks == 6
+
+
+def test_request_urgent_signals_capacity_deadlock():
+    host = _host(cap=8)
+    ts = TieredStore(host, _disk(), demote_after_s=1e9, demote_watermark=1.0)
+    ts.store(1, tokens=100, blocks=6, now=0.0, target="disk")
+    ts.store(2, tokens=100, blocks=6, now=0.0)
+    ts.mark_in_flight(2)                   # undemotable: in-flight
+    now = 10.0
+    assert ts.request(1, now=now) is False          # patient: keep waiting
+    assert ts.request(1, now=now, urgent=True) is None  # stall hatch: abandon
+    assert ts.request(404, now=now) is None             # unknown sid
+
+
+# ---------------------------------------------------------------------------
+# four-way retention decision
+# ---------------------------------------------------------------------------
+
+class _Telem:
+    """Pressured snapshot: waiting demand far above free blocks, so HBM
+    pinning prices itself out and the off-device tiers compete."""
+
+    def __init__(self, est):
+        self.est = est
+        self.waiting_prefill_blocks = 300
+        self.free_blocks = 0
+
+    def tool_estimate(self, kind):
+        return self.est
+
+
+def _cosched(est_tool_s, recompute_s=30.0):
+    cs = OpportunisticCoScheduler(
+        CoSchedulerConfig(disk_min_tokens=4_096),
+        telem=_Telem(est_tool_s), recompute_time_fn=lambda n: recompute_s)
+    cs.swap_seconds = lambda n: 0.5
+    cs.disk_read_seconds = lambda n: 1.0
+    cs.disk_write_seconds = lambda n: 2.0
+    return cs
+
+
+def _tool_session(tokens=8192, kind="ci_runner"):
+    s = make_session(0.0, [Round(tokens, 8, kind, 100.0)], ideal_time=1.0)
+    s.resident_len = tokens
+    s.kv_blocks = tokens // 32
+    return s
+
+
+def test_retention_four_way_prefers_disk_on_long_idle():
+    s = _tool_session()
+    # long expected idle: disk wins over host even though both net positive
+    cs = _cosched(est_tool_s=1e4)
+    assert cs.disk_net(s, 0.0) > 0 and cs.offload_net(s, 0.0) > 0
+    assert cs.retention_decision(s, 0.0) == KVAction.OFFLOAD_DISK
+    # idle below the long-idle threshold (but long enough that pressure
+    # still prices out the pin): host DRAM keeps the warm restore
+    cs = _cosched(est_tool_s=30.0, recompute_s=5.0)
+    assert cs.retention_decision(s, 0.0) == KVAction.OFFLOAD
+    # tiny context: below the NVMe floor, host offload still allowed
+    tiny = _tool_session(tokens=2048)
+    cs = _cosched(est_tool_s=1e4)
+    cs.cfg = CoSchedulerConfig(disk_min_tokens=4_096, offload_min_tokens=1024)
+    assert cs.disk_net(tiny, 0.0) == float("-inf")
+    assert cs.retention_decision(tiny, 0.0) == KVAction.OFFLOAD
+    # recompute cheaper than any restore: FREE
+    cs = _cosched(est_tool_s=1e4, recompute_s=0.01)
+    assert cs.retention_decision(s, 0.0) == KVAction.FREE
+
+
+# ---------------------------------------------------------------------------
+# engine: end-to-end disk round trip (sim)
+# ---------------------------------------------------------------------------
+
+def _engine(policy="fcfs", blocks=9000, **cfg_kw):
+    return Engine(EngineConfig(total_kv_blocks=blocks, block_size=32,
+                               token_budget=8192, max_decode_batch=64,
+                               decode_granularity=8, cpu_slots=8, **cfg_kw),
+                  policy, BACKEND)
+
+
+def test_disk_offload_round_trip_restores_resident_len():
+    """Force OFFLOAD_DISK at every tool yield: the session parks on NVMe
+    (staged write), promotes back through host DRAM on resume (staged
+    restore), and finishes with exact resident_len — SWAP_OUT tier=disk,
+    PROMOTE, and SWAP_IN tier=disk events paired."""
+    eng = _engine(disk_tier_blocks=50_000)
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD_DISK, 0.0)
+    s = make_session(0.0, [Round(50_000, 32, "terminal", 30.0),
+                           Round(2_000, 32, None, 0.0)], ideal_time=10.0)
+    finished, _ = run_sim(eng, [s], max_time=1e5)
+    assert len(finished) == 1
+    outs = [e for e in eng.bus.log if e.kind == ev.SWAP_OUT
+            and e.data.get("tier") == "disk"]
+    ins = [e for e in eng.bus.log if e.kind == ev.SWAP_IN
+           and e.data.get("tier") == "disk"]
+    proms = [e for e in eng.bus.log if e.kind == ev.PROMOTE]
+    assert len(outs) == 1 and len(ins) == 1 and len(proms) == 1
+    assert ins[0].data["tokens"] == 50_032      # prefill + round-0 decode
+    t = eng.tiers.stats()
+    assert t["direct_to_disk"] == 1 and t["staged_restores"] == 1
+    assert t["disk"]["hits"] == 1 and t["host"]["hits"] == 1
+    assert eng.disk.used_blocks == 0 and eng.host.used_blocks == 0
+    eng.check_invariants()
+
+
+def test_disk_offload_falls_back_when_disk_absent():
+    """OFFLOAD_DISK without a configured disk tier degrades to the host
+    path (no crash, tier=host events)."""
+    eng = _engine()                               # disk_tier_blocks=0
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD_DISK, 0.0)
+    s = make_session(0.0, [Round(30_000, 16, "terminal", 10.0),
+                           Round(500, 16, None, 0.0)], ideal_time=10.0)
+    finished, _ = run_sim(eng, [s], max_time=1e5)
+    assert len(finished) == 1
+    assert any(e.kind == ev.SWAP_OUT and e.data.get("tier") == "host"
+               for e in eng.bus.log)
+    assert eng.host.hits == 1
+    eng.check_invariants()
+
+
+def test_engine_demotes_cold_host_entries_and_still_finishes():
+    """A long tool wait with a tight, pressured host tier: the engine's
+    per-tick maintain() demotes the cold entry to NVMe and the session
+    still restores token-exact (DEMOTE + PROMOTE events appear)."""
+    eng = _engine(host_tier_blocks=2_000, disk_tier_blocks=50_000,
+                  disk_demote_after_s=5.0, disk_demote_watermark=0.1)
+    eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
+    a = make_session(0.0, [Round(40_000, 32, "terminal", 120.0),
+                           Round(2_000, 32, None, 0.0)], ideal_time=10.0)
+    b = make_session(1.0, [Round(20_000, 32, "terminal", 8.0),
+                           Round(1_000, 32, None, 0.0)], ideal_time=10.0)
+    finished, _ = run_sim(eng, [a, b], max_time=1e5)
+    assert len(finished) == 2
+    assert eng.bus.counts.get(ev.DEMOTE, 0) >= 1
+    assert eng.bus.counts.get(ev.PROMOTE, 0) >= 1
+    t = eng.tiers.stats()
+    assert t["demotions"] >= 1 and t["staged_restores"] >= 1
+    assert eng.disk.used_blocks == 0 and eng.host.used_blocks == 0
+    eng.check_invariants()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_random_four_way_schedule_holds_invariants(seed):
+    """Randomized four-way retention over a family workload: every tick
+    holds the engine's extended invariants (tier occupancy included) and
+    the run drains clean."""
+    from repro.configs.qwen3_coder_30b import CONTEXT_LIMIT
+    from repro.workloads.generator import WorkloadSpec, generate
+    rng = random.Random(seed)
+
+    def random_yield(s, now):
+        r = rng.random()
+        if r < 0.25:
+            return KVAction.PIN, rng.choice([5.0, float("inf")])
+        if r < 0.5:
+            return KVAction.OFFLOAD, 0.0
+        if r < 0.75:
+            return KVAction.OFFLOAD_DISK, 0.0
+        return KVAction.FREE, 0.0
+
+    eng = _engine(policy="continuum", blocks=6000, host_tier_blocks=6000,
+                  disk_tier_blocks=20_000, disk_demote_after_s=2.0,
+                  disk_demote_watermark=0.1)
+    eng.policy.on_tool_yield = random_yield
+    spec = WorkloadSpec(regime="ILR-1", arrival_rate=1.0, n_sessions=8,
+                        seed=seed, max_context=CONTEXT_LIMIT, n_families=2)
+    sessions = generate(spec, QWEN3, H100)
+    arrivals = sorted(sessions, key=lambda s: s.arrival_time)
+    i, now = 0, 0.0
+    for _ in range(60_000):
+        while i < len(arrivals) and arrivals[i].arrival_time <= now:
+            eng.submit(arrivals[i])
+            i += 1
+        elapsed, prog = eng.tick(now)
+        eng.check_invariants()
+        if elapsed:
+            now += elapsed
+        elif not prog:
+            nxt = eng.tools.next_event_time()
+            t2 = eng.next_timer_event(now)
+            cands = [t for t in (nxt, t2) if t is not None]
+            if i < len(arrivals):
+                cands.append(arrivals[i].arrival_time)
+            if eng.waiting:
+                cands.append(now + 0.5)
+            if not cands:
+                break
+            now = max(now + 1e-9, min(cands))
+        if eng.done() and i >= len(arrivals):
+            break
+    assert eng.done()
+    assert len(eng.finished) + len(eng.rejected) == len(sessions)
+    assert eng.blocks.free == eng.blocks.total
+    assert eng.host.used_blocks == 0 and eng.disk.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# property/soak: random tier-op sequences never leak or overflow
+# ---------------------------------------------------------------------------
+
+op_seq = st.lists(
+    st.tuples(st.integers(0, 5),               # sid
+              st.sampled_from(["store_host", "store_disk", "inflight",
+                               "resolve", "request", "load", "drop",
+                               "maintain", "tick"]),
+              st.integers(1, 6)),              # blocks
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(op_seq, st.integers(4, 24), st.integers(6, 30))
+def test_tiered_store_random_ops_occupancy_invariants(ops, host_cap,
+                                                      disk_cap):
+    """Random store/demote/promote/drop sequences — including future-gated
+    in-flight entries — must keep 0 <= used <= capacity on both tiers and
+    account every live entry in exactly one tier (no leaks)."""
+    host = HostTier(HostTierConfig(capacity_blocks=host_cap, pcie_bw=1e9),
+                    bytes_per_token=1e5, block_size=32)
+    disk = DiskTier(DiskTierConfig(capacity_blocks=disk_cap, read_bw=1e9,
+                                   write_bw=5e8, queue_depth=2),
+                    bytes_per_token=1e5, block_size=32)
+    ts = TieredStore(host, disk, recompute_time=lambda n: 1e3,
+                     demote_after_s=1.0, demote_watermark=0.1)
+    futs = {}
+    now = 0.0
+    expect = {}                       # sid -> blocks of live entries
+    for sid, op, blocks in ops:
+        now += 0.7
+        if op in ("store_host", "store_disk"):
+            target = "disk" if op == "store_disk" else "host"
+            tier = disk if target == "disk" else host
+            if not ts.holds(sid) and tier.can_store(blocks):
+                ts.store(sid, tokens=blocks * 32, blocks=blocks, now=now,
+                         target=target, context_tokens=blocks * 32)
+                expect[sid] = blocks
+        elif op == "inflight":
+            if ts.holds(sid):
+                ts.mark_in_flight(sid)
+                f = _Fut()
+                ts.attach_future(sid, f)
+                futs[sid] = f
+        elif op == "resolve":
+            if sid in futs:
+                futs.pop(sid).resolve()
+        elif op == "request":
+            r = ts.request(sid, now, urgent=(blocks % 2 == 0))
+            if r is None and sid in expect and not ts.holds(sid):
+                expect.pop(sid)       # caller would abandon to recompute
+        elif op == "load":
+            if ts.ready(sid, now):
+                got = ts.load(sid, now)
+                if got is not None:
+                    expect.pop(sid, None)
+                    futs.pop(sid, None)
+        elif op == "drop":
+            ts.drop(sid)
+            expect.pop(sid, None)
+            futs.pop(sid, None)
+        elif op == "maintain":
+            ts.maintain(now)
+        elif op == "tick":
+            now += 50.0
+            ts.maintain(now, demotable=lambda s: s % 2 == 0)
+        # --- invariants after every op ---
+        assert 0 <= host.used_blocks <= host_cap
+        assert 0 <= disk.used_blocks <= disk_cap
+        live = sum(expect.values())
+        assert host.used_blocks + disk.used_blocks == live, \
+            f"leak: host={host.used_blocks} disk={disk.used_blocks} " \
+            f"expected={live}"
+        for sid in expect:
+            assert ts.tier_of(sid) in ("host", "disk")
+    # drain: dropping everything returns both tiers to zero
+    for sid in list(expect):
+        ts.drop(sid)
+    assert host.used_blocks == 0 and disk.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# live paged runner: staged restore token parity
+# ---------------------------------------------------------------------------
+
+pytest.importorskip("jax")
+
+
+@pytest.mark.live
+def test_paged_disk_tier_token_parity(tmp_path):
+    """Forced OFFLOAD_DISK on the live paged runner with a real-file
+    spool: KV really spills to NVMe files and fills back (h2n/n2h jobs on
+    the stream), restores gen-certify, and greedy tokens are identical to
+    the host-only offload path."""
+    from repro.core.events import EventBus
+    from repro.engine.engine import run_live
+    from repro.engine.jax_runner import JaxBackend
+    from repro.engine.tools import RealToolExecutor
+    from repro.configs.registry import get_config
+
+    def run(action, disk_blocks, spool):
+        backend = JaxBackend(get_config("llama3.2-1b").reduced(),
+                             layout="paged", max_slots=4, max_len=256,
+                             async_swap=True, disk_spool=spool)
+        bus = EventBus()
+        tools = RealToolExecutor(cpu_slots=2, bus=bus)
+        eng = Engine(EngineConfig(total_kv_blocks=30, block_size=32,
+                                  token_budget=256, max_decode_batch=4,
+                                  decode_granularity=4, cpu_slots=2,
+                                  disk_tier_blocks=disk_blocks),
+                     "fcfs", backend, bus=bus, tool_exec=tools)
+        eng.policy.on_tool_yield = lambda s, now: (action, 0.0)
+        fam = [(("dsk", i), 32) for i in range(3)]
+        sessions = []
+        for j, sid in enumerate((97001, 97002)):
+            # identical sids across both runs: decode-appended context ids
+            # are content-addressed by (sid, position), so parity requires
+            # the same identities
+            s = make_session(0.05 * j, [Round(128, 8, "t", 0.05),
+                                        Round(32, 6, None, 0.0)],
+                             ideal_time=1.0, sid=sid)
+            s.meta["prefix_hashes"] = fam + [(("u", sid, 0), 32)]
+            sessions.append(s)
+        finished, _ = run_live(eng, sessions, timeout=120)
+        tools.shutdown()
+        eng.check_invariants()
+        out = {s.sid: list(s.meta["generated"]) for s in finished}
+        stream = backend._impl.stream
+        stats = (stream.h2n_completed, stream.n2h_completed,
+                 eng.tiers.stats() if eng.tiers else None)
+        backend.close()
+        return out, stats
+
+    host_out, _ = run(KVAction.OFFLOAD, 0, None)
+    disk_out, (h2n, n2h, tier) = run(KVAction.OFFLOAD_DISK, 64,
+                                     str(tmp_path))
+    assert disk_out == host_out and len(disk_out) == 2
+    assert h2n >= 1 and n2h >= 1          # spool writes/reads really ran
+    assert tier["direct_to_disk"] >= 1
+    assert tier["staged_restores"] >= 1
+    assert tier["disk"]["used_blocks"] == 0
+    assert tier["host"]["used_blocks"] == 0
