@@ -65,12 +65,16 @@ def fmt_row(stats: Dict) -> Dict:
     }
 
 
-def bench_main(run_fn, dry_help: str = "CI smoke") -> None:
+def bench_main(run_fn, dry_help: str = "CI smoke", add_args=None) -> None:
     """Shared CLI epilogue for the standalone benchmarks: ``--dry``/
     ``--full`` mode selection, JSON-lines rows on stdout, and the
     machine-readable ``--json OUT`` file the bench-regression gate
     (scripts/check_bench.py) consumes — one place to evolve the wire
-    shape, five call sites."""
+    shape, five call sites.
+
+    ``add_args(parser)`` lets a bench register extra flags; it must return
+    the list of dest names, which are forwarded to ``run_fn`` as keyword
+    arguments (e.g. the obs bench's ``--trace OUT.json``)."""
     import argparse
     import json
 
@@ -79,8 +83,10 @@ def bench_main(run_fn, dry_help: str = "CI smoke") -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="also write rows as machine-readable JSON")
+    extra_names = add_args(ap) if add_args is not None else []
     args = ap.parse_args()
-    rows = run_fn(quick=not args.full, dry=args.dry)
+    extra = {k: getattr(args, k) for k in extra_names}
+    rows = run_fn(quick=not args.full, dry=args.dry, **extra)
     for row in rows:
         print(json.dumps(row))
     if args.json:

@@ -1,0 +1,150 @@
+"""Observability overhead benchmark + critical-path breakdown figure.
+
+Runs the standard agentic mix (ILR-2, Qwen3-Coder-30B x H100, MARS policy)
+twice per repetition — tracing off, then tracing on (``Tracer.install``:
+full span assembly, tick/audit emission, metrics histograms) — with
+freshly generated sessions each run (the engine mutates them). Three
+measurements:
+
+* ``overhead_ratio`` — min-aggregated wall-clock ratio over interleaved
+  repetitions (GC quiesced around each run). End-to-end but noisy on
+  shared CI cores, so the CI gate bound is catastrophic-only; the tight
+  claim rides on the next number.
+* ``tracer_cpu_frac`` — the tracer's *marginal* CPU cost, measured
+  directly: replay the recorded event stream through a fresh tracer and
+  divide by the engine's wall time. This is the observability plane's own
+  work (span assembly + histograms), free of scheduler noise — the <=3%
+  claim is asserted on it in non-dry runs.
+* ``bucket_sum_err_frac`` — worst relative error of
+  ``sum(critical_path(sid).buckets) == e2e`` over finished sessions. The
+  exclusive-timeline invariant; deterministic, gated tight (<=1%).
+
+The ``critical_path`` row is the paper-style breakdown figure: per-plane
+fractions of total end-to-end latency (GPU / CPU-tool / PCIe+NVMe I/O /
+control-plane wait) over the mix. ``--trace OUT.json`` additionally
+writes the traced run's Perfetto export (nightly uploads it as an
+artifact; ``scripts/trace_report.py`` consumes it).
+"""
+from __future__ import annotations
+
+import gc
+import time
+from typing import Dict, List, Optional
+
+from repro.configs.qwen3_coder_30b import CONFIG, CONTEXT_LIMIT
+from repro.engine.engine import run_sim
+from repro.models.perf_model import H100
+from repro.obs import MetricsRegistry, Tracer, bind_engine_probes, export_perfetto
+from repro.workloads.generator import WorkloadSpec, generate
+
+RATE = 0.33
+REGIME = "ILR-2"
+
+
+def _run_once(traced: bool, *, n_sessions: int, seed: int):
+    try:                                   # package import (tests, run.py)
+        from benchmarks.common import engine_for
+    except ModuleNotFoundError:            # standalone: python benchmarks/x.py
+        from common import engine_for
+    spec = WorkloadSpec(regime=REGIME, arrival_rate=RATE,
+                        n_sessions=n_sessions, seed=seed,
+                        max_context=CONTEXT_LIMIT)
+    sessions = generate(spec, CONFIG, H100)
+    eng = engine_for(CONFIG, H100, "mars")
+    tr = None
+    if traced:
+        tr = Tracer.install(eng, metrics=MetricsRegistry())
+        bind_engine_probes(tr.metrics, eng)
+    gc.collect()
+    gc.disable()
+    t0 = time.perf_counter()
+    run_sim(eng, sessions, max_time=2e5)
+    dt = time.perf_counter() - t0
+    gc.enable()
+    return dt, eng, tr
+
+
+def run(quick: bool = True, dry: bool = False,
+        trace: Optional[str] = None) -> List[Dict]:
+    if dry:
+        n_sessions, reps = 12, 2
+    elif quick:
+        n_sessions, reps = 24, 4
+    else:
+        n_sessions, reps = 48, 6
+    offs: List[float] = []
+    ons: List[float] = []
+    eng = tr = None
+    for rep in range(reps):
+        # interleaved off/on pairs: slow-machine drift hits both modes;
+        # min aggregation then discards the noise spikes
+        woff, _, _ = _run_once(False, n_sessions=n_sessions, seed=0)
+        won, eng, tr = _run_once(True, n_sessions=n_sessions, seed=0)
+        offs.append(woff)
+        ons.append(won)
+    wall_off, wall_on = min(offs), min(ons)
+    overhead_ratio = wall_on / wall_off
+
+    # marginal tracer cost: replay the recorded stream through a fresh
+    # tracer — pure observability work, no scheduler noise
+    events = list(eng.bus.log)
+    gc.collect()
+    t0 = time.perf_counter()
+    replayed = Tracer.replay(events)
+    tracer_s = time.perf_counter() - t0
+    tracer_cpu_frac = tracer_s / wall_on
+
+    # exclusive-timeline invariant: buckets partition e2e
+    worst_err = 0.0
+    for sid in tr.finished_sids():
+        cp = tr.critical_path(sid)
+        err = abs(sum(cp["buckets"].values()) - cp["e2e"]) \
+            / max(cp["e2e"], 1e-12)
+        worst_err = max(worst_err, err)
+    agg = tr.aggregate()
+
+    pf = export_perfetto(tr, trace)
+    rows: List[Dict] = [
+        {"figure": "obs", "name": "overhead",
+         "wall_off_s": round(wall_off, 3), "wall_on_s": round(wall_on, 3),
+         "overhead_ratio": round(overhead_ratio, 4),
+         "tracer_cpu_frac": round(tracer_cpu_frac, 5),
+         "events": len(events), "ticks": len(tr.ticks),
+         "sessions": tr.finished_count, "reps": reps},
+        {"figure": "obs", "name": "critical_path",
+         "sessions": agg["sessions"],
+         "e2e_total_s": round(agg["e2e_total"], 2),
+         **{f"{p}_frac": round(f, 4)
+            for p, f in agg["bucket_frac"].items()},
+         "bucket_sum_err_frac": round(worst_err, 9)},
+        {"figure": "obs", "name": "export",
+         "trace_events": len(pf["traceEvents"]),
+         "replay_sessions": replayed.finished_count,
+         "dropped_session_tracks":
+             pf["otherData"]["dropped_session_tracks"],
+         "trace_path": trace},
+    ]
+    assert worst_err <= 0.01, \
+        f"critical-path buckets drift from e2e by {worst_err:.2%}"
+    assert replayed.finished_count == tr.finished_count, \
+        "JSONL replay disagrees with the live tracer"
+    if not dry:
+        assert tracer_cpu_frac <= 0.03, \
+            f"tracer marginal cost {tracer_cpu_frac:.1%} of engine wall " \
+            f"time — observability is no longer <=3%"
+        assert overhead_ratio <= 1.15, \
+            f"traced runs {overhead_ratio:.2f}x untraced — emission is " \
+            f"back on the hot path (re-pricing in the audit?)"
+    return rows
+
+
+if __name__ == "__main__":
+    from common import bench_main
+
+    def _add_args(ap):
+        ap.add_argument("--trace", metavar="OUT.json", default=None,
+                        help="write the traced run's Perfetto export here")
+        return ["trace"]
+
+    bench_main(run, dry_help="CI smoke: tiny mix, two repetitions",
+               add_args=_add_args)

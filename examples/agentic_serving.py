@@ -9,6 +9,10 @@ tool yield parks its KV through the staged host->disk path (forced, so the
 tiny demo contexts exercise it) and restores promote back through host
 DRAM. Either way the per-tier occupancy / hit-rate breakdown prints at
 exit.
+
+``--trace OUT.json`` attaches the critical-path tracer (repro.obs) and
+writes a Perfetto trace at exit (open at ui.perfetto.dev), plus prints the
+per-session latency-breakdown table.
 """
 import argparse
 import os
@@ -75,6 +79,9 @@ def main():
     ap.add_argument("--disk-tier", action="store_true",
                     help="enable the NVMe cold tier (real-file spool) and "
                          "force the staged offload path at tool yields")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Perfetto trace and print the per-session "
+                         "critical-path breakdown at exit")
     args = ap.parse_args()
 
     cfg = get_config("qwen2.5-3b").reduced()
@@ -87,6 +94,10 @@ def main():
                      max_decode_batch=4, decode_granularity=4, cpu_slots=2,
                      disk_tier_blocks=(1024 if args.disk_tier else 0)),
         "mars", backend, bus=bus, tool_exec=tools)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer.install(engine)
     if args.disk_tier:
         # demo contexts are far below disk_min_tokens: force the staged
         # path so the run really exercises spill -> promote -> restore
@@ -130,6 +141,15 @@ def main():
                   f"tracker={ws.tracker}")
         print("KV tier breakdown:")
         _print_tier_breakdown(engine)
+        if tracer is not None:
+            from repro.obs import breakdown_table, export_perfetto
+            export_perfetto(tracer, args.trace)
+            rows = [tracer.critical_path(sid)
+                    for sid in tracer.finished_sids()]
+            print("per-session critical-path breakdown:")
+            print(breakdown_table([r for r in rows if r]))
+            print(f"Perfetto trace written to {args.trace} "
+                  f"(open at ui.perfetto.dev)")
     finally:
         tools.shutdown()
         backend.close()

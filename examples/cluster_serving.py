@@ -3,6 +3,11 @@ many simulated engine replicas with failures, stragglers, and elastic join.
 Demonstrates the 1000+ node control-plane story on this host.
 
     PYTHONPATH=src python examples/cluster_serving.py [--replicas 64]
+
+``--trace OUT.json`` attaches one critical-path tracer per replica and
+writes a multi-process Perfetto trace at exit (one process track per
+replica; open at ui.perfetto.dev), plus prints the fleet-wide per-session
+latency-breakdown table.
 """
 import argparse
 import sys
@@ -29,6 +34,9 @@ def main():
                     help="replicas to fail mid-run")
     ap.add_argument("--families", type=int, default=12,
                     help="shared-prefix session families (0 = independent)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a per-replica Perfetto trace and print the "
+                         "fleet critical-path breakdown at exit")
     args = ap.parse_args()
 
     backend = SimBackend(CONFIG, H100)
@@ -36,11 +44,15 @@ def main():
                  / kv_cache_bytes(CONFIG, 1) / 32)
     router = ClusterRouter(RouterConfig(heartbeat_timeout=15.0))
     engines = {}
+    tracers = {}
     for i in range(args.replicas):
         rid = f"replica-{i}"
         engines[rid] = Engine(EngineConfig(total_kv_blocks=blocks,
                                            cpu_slots=16), "mars", backend)
         router.register(rid, engines[rid], now=0.0)
+        if args.trace:
+            from repro.obs import Tracer
+            tracers[rid] = Tracer.install(engines[rid])
 
     spec = WorkloadSpec(regime="ILR-1", arrival_rate=args.rate,
                         n_sessions=args.sessions, seed=0,
@@ -97,6 +109,19 @@ def main():
           f"{prefix['cluster_prefix_queries']} sessions, "
           f"{prefix['cluster_indexed_blocks']} indexed blocks across "
           f"{len(prefix['replicas'])} advertising replicas")
+    if args.trace:
+        from repro.obs import breakdown_table, export_perfetto
+        export_perfetto(tracers, args.trace)
+        rows = [tr.critical_path(sid)
+                for rid, tr in sorted(tracers.items())
+                for sid in tr.finished_sids()]
+        rows = [r for r in rows if r]
+        rows.sort(key=lambda r: -r["e2e"])
+        print("\nfleet critical-path breakdown (slowest sessions first):")
+        print(breakdown_table(rows))
+        print(f"Perfetto trace written to {args.trace} "
+              f"({len(tracers)} replica process tracks; "
+              f"open at ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

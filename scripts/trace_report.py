@@ -1,0 +1,207 @@
+#!/usr/bin/env python
+"""Latency-breakdown report over a recorded trace.
+
+    python scripts/trace_report.py TRACE [--top K] [--max-rows N] [--json]
+
+``TRACE`` is either
+
+* a **Perfetto / Chrome-trace JSON** written by
+  :func:`repro.obs.perfetto.export_perfetto` — the report validates the
+  exporter's schema first (exit nonzero on violations, which is what makes
+  the exporter CI-checkable) and recomputes the per-session breakdown from
+  the exported ``X`` slices' ``args: {sid, plane, kind}``, or
+* an **events JSONL** dump (:func:`repro.obs.trace.dump_events_jsonl`) —
+  replayed through the :class:`~repro.obs.trace.Tracer` state machine.
+
+Either way the output is the per-session latency-breakdown table, the
+fleet-level per-plane aggregate, and the top-k critical-path segments.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+from repro.obs.trace import (PLANES, Tracer, breakdown_table,
+                             load_events_jsonl)
+
+_REQUIRED_BY_PH = {
+    "X": ("name", "pid", "tid", "ts", "dur"),
+    "M": ("name", "pid", "args"),
+    "C": ("name", "pid", "ts", "args"),
+    "b": ("name", "pid", "tid", "ts", "id", "cat"),
+    "e": ("name", "pid", "tid", "ts", "id", "cat"),
+    "i": ("name", "pid", "tid", "ts"),
+}
+
+
+def validate_perfetto(trace: dict) -> List[str]:
+    """Schema check for the exporter's output; returns human-readable
+    violations (empty list == valid)."""
+    errs: List[str] = []
+    evs = trace.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["traceEvents missing or not a list"]
+    procs = set()
+    async_open: Dict[Tuple, int] = {}
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph not in _REQUIRED_BY_PH:
+            errs.append(f"event {i}: unknown ph {ph!r}")
+            continue
+        missing = [k for k in _REQUIRED_BY_PH[ph] if k not in e]
+        if missing:
+            errs.append(f"event {i} (ph={ph}): missing {missing}")
+            continue
+        if "ts" in e and (not isinstance(e["ts"], (int, float))
+                          or e["ts"] < 0):
+            errs.append(f"event {i}: bad ts {e['ts']!r}")
+        if ph == "X":
+            if not isinstance(e["dur"], (int, float)) or e["dur"] < 0:
+                errs.append(f"event {i}: bad dur {e.get('dur')!r}")
+            args = e.get("args", {})
+            if "sid" in args:
+                for k in ("plane", "kind"):
+                    if k not in args:
+                        errs.append(f"event {i}: session slice missing "
+                                    f"args.{k}")
+                if args.get("plane") not in PLANES:
+                    errs.append(f"event {i}: unknown plane "
+                                f"{args.get('plane')!r}")
+        elif ph == "M":
+            if e["name"] == "process_name":
+                procs.add(e["pid"])
+        elif ph == "C":
+            if "value" not in e.get("args", {}):
+                errs.append(f"event {i}: counter without args.value")
+        elif ph == "b":
+            async_open[(e["pid"], e["cat"], e["id"], e["name"])] = (
+                async_open.get((e["pid"], e["cat"], e["id"], e["name"]), 0)
+                + 1)
+        elif ph == "e":
+            key = (e["pid"], e["cat"], e["id"], e["name"])
+            if async_open.get(key, 0) <= 0:
+                errs.append(f"event {i}: async end without begin {key}")
+            else:
+                async_open[key] -= 1
+    for key, n in async_open.items():
+        if n > 0:
+            errs.append(f"async begin without end: {key} x{n}")
+    if not procs:
+        errs.append("no process_name metadata (expected one per replica)")
+    for e in evs:
+        if "pid" in e and e["pid"] not in procs:
+            errs.append(f"event references unnamed pid {e['pid']}")
+            break
+    od = trace.get("otherData", {})
+    if "generator" not in od:
+        errs.append("otherData.generator missing")
+    return errs
+
+
+def rows_from_perfetto(trace: dict, top: int = 5) -> List[dict]:
+    """Recompute critical-path rows from the exported session slices."""
+    by_sid: Dict[int, List[dict]] = {}
+    for e in trace["traceEvents"]:
+        if e.get("ph") != "X":
+            continue
+        args = e.get("args", {})
+        if "sid" not in args or "plane" not in args:
+            continue   # tick slices etc.
+        by_sid.setdefault(args["sid"], []).append(e)
+    rows = []
+    for sid, slices in sorted(by_sid.items()):
+        buckets = dict.fromkeys(PLANES, 0.0)
+        segs = []
+        for e in slices:
+            dur_s = e["dur"] / 1e6
+            buckets[e["args"]["plane"]] += dur_s
+            segs.append({"kind": e["args"]["kind"],
+                         "plane": e["args"]["plane"], "dur": dur_s,
+                         "start": e["ts"] / 1e6,
+                         "round": e["args"].get("round", 0)})
+        segs.sort(key=lambda s: -s["dur"])
+        e2e = sum(buckets.values())
+        rows.append({
+            "sid": sid, "e2e": e2e, "buckets": buckets,
+            "bucket_frac": {k: (v / e2e if e2e > 0 else 0.0)
+                            for k, v in buckets.items()},
+            "dominant_bucket": max(buckets, key=buckets.get),
+            "dominant": segs[0] if segs else None,
+            "top_segments": segs[:top],
+        })
+    return rows
+
+
+def rows_from_jsonl(path: str, top: int = 5) -> List[dict]:
+    tr = Tracer.replay(load_events_jsonl(path))
+    return [tr.critical_path(sid, top=top) for sid in tr.finished_sids()]
+
+
+def top_segments(rows: List[dict], k: int) -> List[dict]:
+    segs = []
+    for r in rows:
+        for s in r.get("top_segments", []):
+            segs.append({**s, "sid": r["sid"]})
+    segs.sort(key=lambda s: -s["dur"])
+    return segs[:k]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Perfetto JSON or events JSONL")
+    ap.add_argument("--top", type=int, default=10,
+                    help="top-k critical-path segments to list")
+    ap.add_argument("--max-rows", type=int, default=20,
+                    help="session rows to show in the table")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of tables")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        head = f.read(1)
+    is_perfetto = False
+    if head == "{":
+        with open(args.trace) as f:
+            try:
+                doc = json.load(f)
+                is_perfetto = isinstance(doc, dict) and "traceEvents" in doc
+            except json.JSONDecodeError:
+                is_perfetto = False
+    if is_perfetto:
+        errs = validate_perfetto(doc)
+        if errs:
+            for e in errs[:50]:
+                print(f"SCHEMA VIOLATION: {e}", file=sys.stderr)
+            print(f"{len(errs)} schema violation(s) in {args.trace}",
+                  file=sys.stderr)
+            return 1
+        rows = rows_from_perfetto(doc, top=args.top)
+        src = "perfetto"
+    else:
+        rows = rows_from_jsonl(args.trace, top=args.top)
+        src = "jsonl"
+    rows = [r for r in rows if r is not None]
+
+    tops = top_segments(rows, args.top)
+    if args.json:
+        print(json.dumps({"source": src, "sessions": len(rows),
+                          "rows": rows, "top_segments": tops}, indent=1))
+        return 0
+    print(f"# {args.trace} ({src}): {len(rows)} finished sessions")
+    if not rows:
+        print("no finished sessions in trace")
+        return 0
+    print()
+    print(breakdown_table(rows, max_rows=args.max_rows))
+    print()
+    print(f"top {len(tops)} critical-path segments:")
+    for s in tops:
+        print(f"  {s['dur']:>9.3f}s  {s['kind']:<13} plane={s['plane']:<8}"
+              f" sid={s['sid']} r{s.get('round', 0)} @{s['start']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -84,6 +84,10 @@ class OpportunisticCoScheduler:
         # exists (None => three-way retention, no OFFLOAD_DISK outcome)
         self.disk_read_seconds: Optional[Callable[[int], float]] = None
         self.disk_write_seconds: Optional[Callable[[int], float]] = None
+        # the three nets behind the most recent retention_decision — the
+        # observability audit reads this stash instead of re-running the
+        # (swap-sizing, hence expensive) pricing a second time
+        self.last_prices: dict = {}
 
     # --- chunk shrinking ------------------------------------------------------
     def shrink_chunk(self, want_tokens: int, free_blocks: int) -> int:
@@ -197,6 +201,8 @@ class OpportunisticCoScheduler:
         pin_net = self.retention_score(s, now)
         off_net = self.offload_net(s, now)
         dsk_net = self.disk_net(s, now)
+        self.last_prices = {"pin_net": pin_net, "offload_net": off_net,
+                            "disk_net": dsk_net}
         if pin_net > 0.0 and pin_net >= off_net and pin_net >= dsk_net:
             return KVAction.PIN
         if dsk_net > 0.0:

@@ -296,6 +296,31 @@ class MARSPolicy(Policy):
         return self.coord.eviction_order(victims, now)
 
     # opportunistic co-scheduler (four-way adaptive retention, §4.3 ext.)
+    def retention_audit(self, s, now):
+        """Priced alternatives behind the retention decision, for the
+        observability layer's audit records (repro.obs): the three net
+        benefits ``retention_decision`` compared (read from its stash —
+        re-pricing would double the swap-sizing cost on every tool yield),
+        plus the recompute cost a FREE would re-pay. Infinite sentinels
+        (disabled tiers) are reported as None so the record stays
+        JSON-serializable."""
+        if self.cfg.disable_coscheduler:
+            return {}
+
+        def _fin(x):
+            if x is None or x in (float("inf"), float("-inf")):
+                return None
+            return round(x, 6)
+
+        p = self.cosched.last_prices
+        return {
+            "pin_net": _fin(p.get("pin_net")),
+            "offload_net": _fin(p.get("offload_net")),
+            "disk_net": _fin(p.get("disk_net")),
+            "recompute_s": round(self.cosched.recompute_time(s.resident_len),
+                                 6),
+        }
+
     def on_tool_yield(self, s, now):
         if self.cfg.disable_coscheduler:
             return KVAction.FREE, 0.0

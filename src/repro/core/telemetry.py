@@ -8,8 +8,12 @@ hardware instrumentation by (a) the number of in-flight tool invocations and
 (b) per-kind EMA of observed tool durations.
 
 ``cpu_overloaded`` / ``kv_overloaded`` carry hysteresis: a plane must stay
-past its threshold for ``hysteresis_checks`` consecutive probes to flip, and
-below it for the same count to clear, preventing admit/stop oscillation.
+past its threshold for ``hysteresis_checks`` consecutive ``tick()`` calls to
+flip, and below it for the same count to clear, preventing admit/stop
+oscillation. Probes (``probe_gpu`` etc.) only refresh raw readings; the
+hysteresis counters and the churn-EMA decay advance on the explicit
+``tick()`` the engine loop calls exactly once per iteration — flag cadence
+is the engine's, not whatever cadence the GPU probe happens to run at.
 """
 from __future__ import annotations
 
@@ -103,6 +107,11 @@ class Telemetry:
         self.active_sessions = active_sessions
         self.running_decodes = running_decodes
         self.waiting_prefill_blocks = waiting_blocks
+
+    def tick(self) -> None:
+        """Advance hysteresis counters and decay the churn EMA — called by
+        the engine once per tick (probes may run any number of times in
+        between without skewing the flag cadence)."""
         self._update_flags()
 
     def _update_flags(self) -> None:

@@ -312,3 +312,20 @@ class ClusterRouter:
                 "cluster_prefix_hit_tokens": hit_tokens,
                 "cluster_indexed_blocks": blocks,
                 "cluster_prefix_hit_rate": hits / max(1, queries)}
+
+    def stats(self) -> dict:
+        """Control-plane counter snapshot for the metrics registry: fleet
+        membership, placement totals, the requeue backlog, and the event
+        tally (join/leave/failed/recovered/straggler_drain)."""
+        by_kind: Dict[str, int] = {}
+        for e in self.events:
+            by_kind[e["ev"]] = by_kind.get(e["ev"], 0) + 1
+        return {
+            "replicas": len(self.replicas),
+            "alive": sum(1 for r in self.replicas.values() if r.alive),
+            "draining": sum(1 for r in self.replicas.values() if r.draining),
+            "placements": sum(len(r.placed) for r in self.replicas.values()),
+            "sessions_homed": len(self.session_home),
+            "requeue_depth": len(self.requeued),
+            "events": by_kind,
+        }

@@ -29,6 +29,7 @@ by ``TieredStore``.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Set, Tuple
 
@@ -154,6 +155,10 @@ class Engine:
         # benchmark counters (kvcache_bench reads these)
         self.prefill_tokens_computed = 0
         self.prefix_hit_tokens = 0
+        # observability (repro.obs.Tracer.install flips this): per-tick
+        # phase wall timings + retention audit records are only worth their
+        # perf_counter calls when something is listening
+        self.trace_ticks = False
 
     # ------------------------------------------------------------------
     def submit(self, s: Session) -> None:
@@ -166,9 +171,11 @@ class Engine:
             s.phase = Phase.FINISHED
             s.meta["rejected"] = True
             self.rejected.append(s)
-            self.bus.emit("reject", s.arrival_time, s.sid,
+            self.bus.emit(ev.REJECT, s.arrival_time, s.sid,
                           tokens=total_tokens)
             return
+        self.bus.emit(ev.SUBMIT, s.arrival_time, s.sid, tokens=total_tokens,
+                      rounds=len(s.rounds))
         hashes = s.meta.get("prefix_hashes")
         if hashes is not None:
             # the radix assumes one chunk == one KV block; a workload
@@ -251,6 +258,8 @@ class Engine:
     # ------------------------------------------------------------------
     def tick(self, now: float) -> Tuple[float, bool]:
         """Returns (elapsed_seconds, progressed)."""
+        trace = self.trace_ticks
+        t0 = time.perf_counter() if trace else 0.0
         progressed = False
         # 1. tool completions
         for s in self.tools.poll(now):
@@ -258,8 +267,10 @@ class Engine:
                 continue             # detached mid-tool: owned elsewhere now
             self._resume_from_tool(s, now)
             progressed = True
-        # 2. telemetry probe
+        # 2. telemetry probe; hysteresis/churn advance once per tick
         self._probe()
+        self.telem.tick()
+        t1 = time.perf_counter() if trace else 0.0
         # 3. admission
         if self.waiting:
             admitted = self.policy.admit(self.waiting, now)
@@ -297,9 +308,12 @@ class Engine:
                     if s.phase == Phase.TOOL
                     and s.kv_state == KVState.SWAPPED}
             self.tiers.maintain(now, demotable=idle.__contains__)
+        t2 = time.perf_counter() if trace else 0.0
         # 5-6. batch formation + execution
         work = self._form_batch(now)
+        t3 = time.perf_counter() if trace else 0.0
         elapsed = self.backend.run_batch(work, now)
+        t4 = time.perf_counter() if trace else 0.0
         # swap-completion handshake: bind the D2H drains the backend just
         # launched to their tier entries — from here on, ready() answers
         # from the real transfer, not the modeled completion time (a
@@ -311,6 +325,21 @@ class Engine:
         if not work.empty:
             self._apply(work, now, now + elapsed, elapsed)
             progressed = True
+        if trace:
+            t5 = time.perf_counter()
+            self.bus.emit(
+                ev.TICK, now, -1,
+                elapsed=elapsed, wall_s=t5 - t0,
+                phases={"tools_control": t1 - t0, "upkeep": t2 - t1,
+                        "form_batch": t3 - t2, "run_batch": t4 - t3,
+                        "bookkeep": t5 - t4},
+                n_decodes=len(work.decodes), n_prefills=len(work.prefills),
+                n_swapins=len(work.swapins), n_swapouts=len(work.swapouts),
+                active=len(self.active), waiting=len(self.waiting),
+                free_blocks=self.blocks.free,
+                active_tools=self.telem.active_tools,
+                host_used=self.host.used_blocks if self.host else 0,
+                disk_used=self.disk.used_blocks if self.disk else 0)
         return elapsed, progressed
 
     # ------------------------------------------------------------------
@@ -778,9 +807,11 @@ class Engine:
             s.meta["swap_cost_s"] = self.tiers.swap_seconds(
                 s.meta.get("host_tokens", toks))
 
-    def _abandon_swap(self, s: Session) -> None:
+    def _abandon_swap(self, s: Session, now: float) -> None:
         """Give up on a swapped-out session's host copy (stale certificate
         or capacity deadlock): rebuild by recompute."""
+        self.bus.emit(ev.SWAP_ABANDON, now, s.sid,
+                      tokens=s.meta.get("swapped_len", 0))
         self._drop_host_copy(s)
         s.kv_state = KVState.NONE
         s.meta["swapped_len"] = 0
@@ -800,7 +831,7 @@ class Engine:
             # a shared block was CoW'd / evicted / re-leased while the
             # transfer was in flight: the certificate is void before any
             # pages were touched — discard the prefetch with the host copy
-            self._abandon_swap(s)
+            self._abandon_swap(s, now)
             return False
         if "swap_in_future" not in s.meta:
             fut = self.backend.prefetch_swap_in(s.sid)
@@ -829,7 +860,7 @@ class Engine:
                 # hatch): abandon to recompute.
                 r = self.tiers.request(s.sid, now, urgent=allow_preempt)
                 if r is None:
-                    self._abandon_swap(s)
+                    self._abandon_swap(s, now)
                 elif not r:
                     return False
             if (s.kv_state == KVState.SWAPPED and tiered
@@ -850,7 +881,7 @@ class Engine:
                 # a shared block recorded at swap-out lost its content
                 # (cache-evicted / rewritten): the restore certificate is
                 # void — abandon the host copy and rebuild by recompute
-                self._abandon_swap(s)
+                self._abandon_swap(s, now)
             elif not allow_preempt:
                 return False
             else:
@@ -858,7 +889,7 @@ class Engine:
                 # nothing else schedulable — no timer will fix that, so
                 # abandon the host copy and rebuild by recompute (deadlock
                 # freedom).
-                self._abandon_swap(s)
+                self._abandon_swap(s, now)
         want = min(s.pending_prefill, budget)
         if want <= 0:
             return False
@@ -902,9 +933,11 @@ class Engine:
                 # snapshot, so only the hit accounting is skipped.
                 loaded = self.tiers.load(s.sid, end)
                 self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,
-                              tier=origin, accounted=loaded is not None)
+                              tier=origin, start=start,
+                              accounted=loaded is not None)
             else:
-                self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks)
+                self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,
+                              start=start)
             if s.pending_prefill <= 0:
                 s.phase = Phase.DECODING
         for s, chunk in work.prefills:
@@ -912,6 +945,9 @@ class Engine:
             s.context_len = max(s.context_len, s.resident_len)
             self.prefill_tokens_computed += chunk
             self._account(s, chunk, elapsed, total_tokens, end)
+            self.bus.emit(ev.PREFILL_CHUNK, end, s.sid, start=start,
+                          tokens=chunk, round=s.cur_round,
+                          resident=s.resident_len)
             if (self.radix is not None and s.cur_round == 0
                     and not s.meta.get("radix_inserted")):
                 self._insert_prefix_progress(s)
@@ -922,6 +958,8 @@ class Engine:
             s.resident_len += g
             s.context_len = max(s.context_len, s.resident_len)
             self._account(s, g, elapsed, total_tokens, end)
+            self.bus.emit(ev.DECODE_STEP, end, s.sid, start=start,
+                          tokens=g, round=s.cur_round, decoded=s.decoded)
             if not s.first_token_seen:
                 s.first_token_seen = True
                 s.ttfts.append(end - s.round_submit)
@@ -953,6 +991,15 @@ class Engine:
         # a staged two-hop restore, FREE recomputes)
         r = s.cur
         action, ttl = self.policy.on_tool_yield(s, now)
+        if self.trace_ticks:
+            # audit record: the chosen retention action next to the priced
+            # alternatives it beat (None fields for policies that don't
+            # price) — trace_report surfaces near-miss decisions from these
+            audit = getattr(self.policy, "retention_audit", None)
+            prices = audit(s, now) if audit is not None else {}
+            self.bus.emit(ev.RETENTION, now, s.sid, action=action.name,
+                          ttl=ttl, blocks=s.kv_blocks,
+                          tokens=s.resident_len, **prices)
         if action == KVAction.PIN and s.kv_blocks > 0:
             s.kv_state = KVState.PINNED
             s.pinned_since = now

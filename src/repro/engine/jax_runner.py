@@ -98,6 +98,16 @@ class JaxBackend:
         # and defers sessions whose swap-in is unresolved (dense stays
         # synchronous — it is the serialized parity baseline)
         self.supports_async_swap = (layout == "paged" and async_swap)
+        # live-path dispatch timing (repro.obs collects this): cumulative
+        # wall seconds per run_batch phase + call counts, so the metrics
+        # plane can attribute live tick time to swap launch / CoW mirror /
+        # restore / prefill / decode dispatch without tracing every tick
+        self.dispatch_stats: Dict[str, float] = {
+            "batches": 0, "wall_s": 0.0,
+            "swap_out_s": 0.0, "cow_s": 0.0, "swap_in_s": 0.0,
+            "prefill_s": 0.0, "decode_s": 0.0,
+            "prefill_calls": 0, "decode_calls": 0,
+        }
         self._impl.calibrate()
 
     # --- engine binding ---------------------------------------------------
@@ -160,6 +170,7 @@ class JaxBackend:
     def run_batch(self, work: BatchWork, now: float) -> float:
         if work.empty:
             return 0.0
+        st = self.dispatch_stats
         t0 = time.monotonic()
         impl = self._impl
         # device-write ordering within a tick: D2H reads of swapped-out
@@ -173,14 +184,34 @@ class JaxBackend:
             fut = impl.swap_out(s)
             if fut is not None:
                 work.swap_futures[s.sid] = fut
+        t1 = time.monotonic()
         impl.apply_cow(work.cow_copies)
+        t2 = time.monotonic()
         for s, _toks in work.swapins:
             impl.swap_in(s, work.leases.get(s.sid, ()))
+        t3 = time.monotonic()
         for s, chunk in work.prefills:
             impl.prefill(s, chunk, work.leases.get(s.sid, ()))
+        t4 = time.monotonic()
         if work.decodes:
             impl.decodes(work.decodes, work.leases)
-        return time.monotonic() - t0
+        t5 = time.monotonic()
+        st["batches"] += 1
+        st["swap_out_s"] += t1 - t0
+        st["cow_s"] += t2 - t1
+        st["swap_in_s"] += t3 - t2
+        st["prefill_s"] += t4 - t3
+        st["decode_s"] += t5 - t4
+        st["wall_s"] += t5 - t0
+        st["prefill_calls"] += len(work.prefills)
+        st["decode_calls"] += len(work.decodes)
+        return t5 - t0
+
+    def swap_stream_stats(self) -> Optional[Dict]:
+        """Background stream counters (None for the dense layout, which
+        swaps synchronously) — absorbed by the metrics registry."""
+        stream = getattr(self._impl, "stream", None)
+        return stream.stats() if stream is not None else None
 
     # --- deterministic synthetic context ----------------------------------
     def _context_ids(self, s: Session) -> List[int]:

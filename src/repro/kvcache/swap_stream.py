@@ -36,7 +36,8 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 
 class TransferFuture:
@@ -150,8 +151,34 @@ class SwapStream:
         self.h2n_completed = 0
         self.n2h_submitted = 0
         self.n2h_completed = 0
+        # per-direction transfer wall time (seconds executing on the
+        # worker, queue wait excluded) — the observability layer's
+        # MetricsRegistry snapshots these alongside queue_depth()
+        self.xfer_seconds: Dict[str, float] = dict.fromkeys(
+            ("d2h", "h2d", "h2n", "n2h"), 0.0)
+        self.xfer_max_s: Dict[str, float] = dict.fromkeys(
+            ("d2h", "h2d", "h2n", "n2h"), 0.0)
 
     DIRECTIONS = ("d2h", "h2d", "h2n", "n2h")
+
+    def queue_depth(self) -> int:
+        """Jobs submitted but not yet executed (approximate: the worker's
+        in-progress job has already left the queue)."""
+        return self._q.qsize()
+
+    def stats(self) -> Dict[str, object]:
+        """One-shot counter snapshot for metrics export."""
+        out: Dict[str, object] = {"queue_depth": self.queue_depth()}
+        for d in self.DIRECTIONS:
+            out[f"{d}_submitted"] = getattr(self, f"{d}_submitted")
+            out[f"{d}_completed"] = getattr(self, f"{d}_completed")
+            out[f"{d}_seconds"] = self.xfer_seconds[d]
+            out[f"{d}_max_s"] = self.xfer_max_s[d]
+        st = self.staging
+        out["staging"] = {"acquires": st.acquires, "reuses": st.reuses,
+                          "blocked_waits": st.blocked_waits,
+                          "max_in_flight": st.max_in_flight}
+        return out
 
     def submit(self, fn: Callable[[], object], *, sid: int = -1,
                direction: str = "d2h") -> TransferFuture:
@@ -177,10 +204,15 @@ class SwapStream:
                 return
             fn, fut = item
             try:
+                t0 = time.monotonic()
                 value = fn()
                 # count before resolving: a consumer woken by result()
                 # must never observe a stale completion counter
                 if fut.direction in self.DIRECTIONS:
+                    dt = time.monotonic() - t0
+                    self.xfer_seconds[fut.direction] += dt
+                    if dt > self.xfer_max_s[fut.direction]:
+                        self.xfer_max_s[fut.direction] = dt
                     setattr(self, f"{fut.direction}_completed",
                             getattr(self, f"{fut.direction}_completed") + 1)
                 fut._resolve(value)

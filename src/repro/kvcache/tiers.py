@@ -239,7 +239,10 @@ class TieredStore:
             m.target = "host"
         self.staged_restores += 1
         if self.bus is not None:
-            self.bus.emit(PROMOTE, now, sid, blocks=blocks, tokens=tokens)
+            # read_s: the NVMe read gating the staged restore's first hop —
+            # the tracer turns [t, t + read_s] into an I/O span
+            self.bus.emit(PROMOTE, now, sid, blocks=blocks, tokens=tokens,
+                          read_s=read_done - now)
 
     def load(self, sid: int, now: float) -> Optional[int]:
         """Swap-in committed: consume the (host-resident) entry. Returns
@@ -309,6 +312,7 @@ class TieredStore:
                 self.recompute_time(m.context_tokens) <= \
                 self.staged_restore_seconds(tokens):
             return False               # disk would not beat recompute: stay
+        idle_s = now - m.stored_at
         tokens, blocks = self.host.evacuate(sid)
         self.disk.store(sid, tokens, blocks, now)
         if self._spill is not None:
@@ -319,7 +323,11 @@ class TieredStore:
         m.target = "disk"
         self.demotions += 1
         if self.bus is not None:
-            self.bus.emit(DEMOTE, now, sid, blocks=blocks, tokens=tokens)
+            # write_s: the modeled spool write behind this demotion (the
+            # entry is unreadable until it lands) — an I/O span for tracing
+            self.bus.emit(DEMOTE, now, sid, blocks=blocks, tokens=tokens,
+                          write_s=self.disk.write_seconds(tokens),
+                          idle_s=idle_s)
         return True
 
     def _make_room(self, blocks: int, now: float) -> None:

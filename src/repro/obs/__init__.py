@@ -1,0 +1,24 @@
+"""Observability plane over the unified event stream (paper §4.1).
+
+``Tracer`` assembles per-session span trees and exclusive critical-path
+segments from the :class:`repro.core.events.EventBus`; ``MetricsRegistry``
+unifies the repo's ad-hoc counters behind one snapshot API; and
+``export_perfetto`` writes a Chrome-trace JSON that opens in
+``ui.perfetto.dev``. See ROADMAP.md "Observability" for the trace format
+and metric naming conventions.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               bind_engine_probes, bind_router_probe,
+                               log_bounds)
+from repro.obs.perfetto import export_perfetto
+from repro.obs.trace import (PLANES, SessionTrace, Span, Tracer,
+                             breakdown_table, dump_events_jsonl,
+                             events_from_dicts, load_events_jsonl)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "bind_engine_probes", "bind_router_probe", "log_bounds",
+    "export_perfetto",
+    "PLANES", "SessionTrace", "Span", "Tracer", "breakdown_table",
+    "dump_events_jsonl", "events_from_dicts", "load_events_jsonl",
+]

@@ -70,17 +70,20 @@ def test_tool_ema_and_hysteresis():
     bus.emit("tool_start", 0.0, 1, kind="x")
     bus.emit("tool_start", 0.0, 2, kind="x")
     assert t.active_tools == 2
-    # one hot probe isn't enough (hysteresis)
     t.probe_gpu(100, 50, 0, 2, 1, 0)
+    # probes alone never flip flags: hysteresis advances on tick()
     assert not t.cpu_overloaded
-    t.probe_gpu(100, 50, 0, 2, 1, 0)
+    # one hot tick isn't enough (hysteresis)
+    t.tick()
+    assert not t.cpu_overloaded
+    t.tick()
     assert t.cpu_overloaded
     bus.emit("tool_end", 5.0, 1, kind="x", duration=5.0)
     bus.emit("tool_end", 6.0, 2, kind="x", duration=7.0)
     assert t.active_tools == 0
     assert 5.0 <= t.tool_estimate("x") <= 7.0
-    t.probe_gpu(100, 50, 0, 2, 1, 0)
-    t.probe_gpu(100, 50, 0, 2, 1, 0)
+    t.tick()
+    t.tick()
     assert not t.cpu_overloaded
 
 
@@ -89,9 +92,10 @@ def test_churn_drives_kv_overload():
     for _ in range(5):
         bus.emit("preempt", 0.0, 1, tokens=100, blocks=50)
         t.probe_gpu(100, 10, 0, 4, 2, 40)
+        t.tick()
     assert t.kv_overloaded
     for _ in range(30):
-        t.probe_gpu(100, 10, 0, 4, 2, 40)   # churn decays
+        t.tick()                            # churn decays
     assert not t.kv_overloaded
 
 
