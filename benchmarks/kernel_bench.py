@@ -46,6 +46,26 @@ def run(quick: bool = True, dry: bool = False):
                  "us_per_call": round(_time(
                      lambda: ops.decode_attention(qd, kp, kp, tbl, lens,
                                                   use_kernel=True)), 1)})
+    kn = jax.random.normal(key, (4, Hkv, D), jnp.float32)
+    wp = jnp.arange(4, dtype=jnp.int32) + 8
+    wo = jnp.full((4,), 3, jnp.int32)
+    lens_f = jnp.full((4,), 100, jnp.int32)
+    rows.append({"figure": "kernels", "name": "paged_attention_fused_interp",
+                 "us_per_call": round(_time(
+                     lambda: ops.decode_attention(
+                         qd, kp, kp, tbl, lens_f, k_new=kn, v_new=kn,
+                         write_pages=wp, write_offsets=wo,
+                         use_kernel=True)), 1)})
+    # gather-free chunked prefill: a chunk of 64 queries over an 8-page
+    # scratch-padded table (the paged flash kernel's hot shape)
+    qc = jax.random.normal(key, (1, Hq, 64, D), jnp.float32)
+    ptbl = jnp.arange(8, dtype=jnp.int32)[None]
+    kvl = jnp.full((1,), 7 * 32, jnp.int32)
+    qoff = jnp.full((1,), 7 * 32 - 64, jnp.int32)
+    rows.append({"figure": "kernels", "name": "paged_flash_attention_interp",
+                 "us_per_call": round(_time(
+                     lambda: ops.prefill_attention(qc, kp, kp, ptbl, kvl,
+                                                   qoff, use_kernel=True)), 1)})
     r_ = jax.random.normal(key, (1, 64, 2, 32), jnp.float32) * 0.3
     w = jnp.full((1, 64, 2, 32), 0.9, jnp.float32)
     u = jnp.zeros((2, 32), jnp.float32)

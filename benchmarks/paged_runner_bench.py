@@ -16,6 +16,12 @@ compile-paying first visits of a shape bucket would dominate a mean). The
 headline row asserts the MARS warm-state claim is *physical*, not
 accounting: paged residency < 0.6x slot-dense for the same family.
 
+A second headline row, ``prefill_hbm_bytes_per_chunk``, reports the
+analytic HBM bytes each prefill chunk touches under the gather-free
+(block-table steered) kernel vs the legacy gather path, from the
+runner's dispatch counters; ``inplace_over_gather`` is gated at <= 0.5
+in ``baselines.json``.
+
 ``--dry`` (CI smoke): tiny family, single rep — exercises both layouts
 without the timing-grade sizes.
 """
@@ -81,12 +87,18 @@ def _run_layout(layout: str, *, K: int, shared_chunks: int, tail_chunks: int,
         if not progressed and elapsed == 0.0:
             time.sleep(0.001)
     eng.check_invariants()
+    st = backend.dispatch_stats
     return {
         "figure": "paged_runner",
         "name": f"{layout}",
         "peak_device_pages": peak_pages,
         "prefill_tokens_computed": eng.prefill_tokens_computed,
         "prefix_hit_tokens": eng.prefix_hit_tokens,
+        # analytic HBM bytes-touched counters kept by the paged layout's
+        # prefill (zero under dense, which has no block-table indirection)
+        "prefill_calls": int(st.get("prefill_calls", 0)),
+        "prefill_gather_bytes": float(st.get("prefill_gather_bytes", 0.0)),
+        "prefill_inplace_bytes": float(st.get("prefill_inplace_bytes", 0.0)),
         # sustained floor: ticks that pay a jit compile (first visit of a
         # (B, max_pages) bucket) would dominate any mean on a short CPU run
         "decode_tick_ms": round(1e3 * min(decode_ticks), 2)
@@ -115,6 +127,21 @@ def run(quick: bool = True, dry: bool = False) -> List[Dict]:
         "physical_sharing": ratio < 0.6,
         "prefill_tokens_saved": dense["prefill_tokens_computed"]
                                 - paged["prefill_tokens_computed"],
+    })
+    # gather-free prefill HBM traffic: per-chunk bytes the legacy gather
+    # path would touch (gather read + dense copy + attention read) vs what
+    # the block-table-steered kernel touches (in-place attention read +
+    # chunk scatter). Analytic model from the runner's dispatch counters;
+    # the gate in baselines.json holds the ratio at <= 0.5x.
+    chunks = max(1, paged["prefill_calls"])
+    g_per = paged["prefill_gather_bytes"] / chunks
+    ip_per = paged["prefill_inplace_bytes"] / chunks
+    rows.append({
+        "figure": "paged_runner", "name": "prefill_hbm_bytes_per_chunk",
+        "prefill_chunks": paged["prefill_calls"],
+        "gather_bytes_per_chunk": round(g_per),
+        "inplace_bytes_per_chunk": round(ip_per),
+        "inplace_over_gather": round(ip_per / max(1.0, g_per), 3),
     })
     if not dry:
         assert ratio < 0.6, \

@@ -327,6 +327,13 @@ class Engine:
             progressed = True
         if trace:
             t5 = time.perf_counter()
+            extra = {}
+            # live-backend prefill HBM traffic counters (gather-free win):
+            # cumulative, so the Perfetto counter track shows the spread
+            dst = getattr(self.backend, "dispatch_stats", None)
+            if dst is not None and "prefill_gather_bytes" in dst:
+                extra["prefill_gather_bytes"] = dst["prefill_gather_bytes"]
+                extra["prefill_inplace_bytes"] = dst["prefill_inplace_bytes"]
             self.bus.emit(
                 ev.TICK, now, -1,
                 elapsed=elapsed, wall_s=t5 - t0,
@@ -339,7 +346,8 @@ class Engine:
                 free_blocks=self.blocks.free,
                 active_tools=self.telem.active_tools,
                 host_used=self.host.used_blocks if self.host else 0,
-                disk_used=self.disk.used_blocks if self.disk else 0)
+                disk_used=self.disk.used_blocks if self.disk else 0,
+                **extra)
         return elapsed, progressed
 
     # ------------------------------------------------------------------

@@ -8,11 +8,15 @@ Two cache layouts, behind one ``_CacheLayout`` strategy surface:
   driven end-to-end by ``kvcache.pool.BlockPool`` block tables: the engine
   snapshots each batched session's lease into ``BatchWork.leases`` and the
   backend executes placement from those tables — prefill scatters chunk KV
-  into leased pages, decode feeds ``(B, max_pages)`` tables to the Pallas
-  ``paged_attention`` kernel (via ``ops.decode_attention``), copy-on-write
-  events are mirrored as device page copies, and host offload moves KV
-  *per block* (only private, non-shared blocks cross PCIe; shared prefix
-  blocks are re-referenced on device at restore). Radix-shared prefix
+  into leased pages and attends **gather-free** over the lease (the
+  scalar-prefetched table steers the paged flash kernel's page reads in
+  place; no dense ``pages[table]`` copy per chunk), decode feeds
+  ``(B, max_pages)`` tables to the Pallas ``paged_attention`` kernel with
+  the new token's KV write fused into its prologue (via
+  ``ops.decode_attention``), copy-on-write events are mirrored as device
+  page copies, and host offload moves KV *per block* (only private,
+  non-shared blocks cross PCIe; shared prefix blocks are re-referenced on
+  device at restore). Radix-shared prefix
   blocks are therefore **physically shared**: a K-session family over one
   repository context occupies ~ceil(L/page) + K*(private tail) pages. Page
   id P (one past the pool) is scratch: padded prefill lanes and idle decode
@@ -107,6 +111,11 @@ class JaxBackend:
             "swap_out_s": 0.0, "cow_s": 0.0, "swap_in_s": 0.0,
             "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_calls": 0, "decode_calls": 0,
+            # analytic prefill HBM traffic: bytes the legacy gather path
+            # would have touched vs bytes the in-place (block-table
+            # steered) path touches; the paged layout accumulates both per
+            # chunk so traces/benches can show the gather-free win
+            "prefill_gather_bytes": 0.0, "prefill_inplace_bytes": 0.0,
         }
         self._impl.calibrate()
 
@@ -319,9 +328,10 @@ class _PagedLayout(_CacheLayout):
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
         def _prefill(params, cache, tokens, positions, table, wpid, woff,
-                     last_idx):
+                     kv_len, last_idx):
             logits, cache = lm_prefill_paged(cfg, params, cache, tokens,
-                                             positions, table, wpid, woff)
+                                             positions, table, wpid, woff,
+                                             kv_len)
             nxt = jnp.argmax(logits[0, last_idx], axis=-1).astype(jnp.int32)
             return nxt, cache
 
@@ -359,7 +369,7 @@ class _PagedLayout(_CacheLayout):
             nxt, self.cache = self._prefill_fn(
                 b.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
                 jnp.asarray(table), jnp.asarray(wpid), jnp.asarray(woff),
-                C - 1)
+                jnp.asarray(C, jnp.int32), C - 1)
             nxt.block_until_ready()
 
         b._prefill_s_per_tok = b._time_once(pf) / C
@@ -625,8 +635,20 @@ class _PagedLayout(_CacheLayout):
         nxt, self.cache = self._prefill_fn(
             b.params, self.cache, jnp.asarray(toks), jnp.asarray(pos[None]),
             jnp.asarray(table), jnp.asarray(wpid), jnp.asarray(woff),
-            len(segment) - 1)
+            jnp.asarray(start + len(segment), jnp.int32), len(segment) - 1)
         s.meta["next_token"] = int(nxt)
+        # analytic HBM bytes-touched accounting for this chunk (surfaced as
+        # dispatch_stats counters -> metrics probe / Perfetto counter track
+        # / bench figure): the legacy gather path pays 3x the gathered view
+        # (gather read + dense-copy write + attention read) plus ~3x the
+        # chunk (dense write, slice, scatter); the in-place path pays the
+        # view once (attention read) plus the chunk scatter
+        tok_bytes = self.kv_bytes_per_token()
+        ctx_toks, chunk_toks = Np * page, C
+        st = b.dispatch_stats
+        st["prefill_gather_bytes"] += \
+            (3 * ctx_toks + 3 * chunk_toks) * tok_bytes
+        st["prefill_inplace_bytes"] += (ctx_toks + chunk_toks) * tok_bytes
 
     def decodes(self, decodes, leases) -> None:
         b, page = self.b, self.page

@@ -4,9 +4,11 @@ On TPU the Pallas kernels run compiled (``interpret=False``); everywhere else
 they run in interpret mode or fall back to the jnp oracle. Model code calls
 these wrappers, never ``pl.pallas_call`` directly.
 
-    attention(...)        prefill/train attention (flash kernel | oracle)
-    decode_attention(...) paged decode attention (paged kernel | oracle)
-    wkv(...)              RWKV6 recurrence        (wkv6 kernel | oracle)
+    attention(...)         prefill/train attention (flash kernel | oracle)
+    prefill_attention(...) gather-free paged prefill (paged flash | oracle)
+    decode_attention(...)  paged decode attention (paged kernel | oracle),
+                           optionally with the KV write fused in
+    wkv(...)               RWKV6 recurrence        (wkv6 kernel | oracle)
 """
 from __future__ import annotations
 
@@ -17,7 +19,11 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_attention import (paged_attention as _paged,
+                                           paged_attention_fused as
+                                           _paged_fused)
+from repro.kernels.paged_flash_attention import (paged_flash_attention as
+                                                 _paged_flash)
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
 
@@ -48,12 +54,49 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
                                     softcap=softcap, q_offset=q_offset)
 
 
-def decode_attention(q, k_pages, v_pages, block_table, lengths, *,
-                     use_kernel: Optional[bool] = None):
-    """q: (B, Hq, D); pages: (P, page, Hkv, D); table: (B, max_pages)."""
+def prefill_attention(q, k_pages, v_pages, block_table, kv_len, q_offset, *,
+                      use_kernel: Optional[bool] = None, block_q: int = 128):
+    """Gather-free chunked-prefill attention over paged KV.
+
+    q: (B, Hq, Sq, D); pages: (P, page, Hkv, D); block_table: (B, Np);
+    kv_len/q_offset: (B,) int32. The chunk's own KV must already be
+    scattered into its pages. On the kernel path pages are read in place
+    (block-table steered DMA); the oracle gathers — it is the ground truth
+    and the CPU default, not the hot path.
+    """
     if _use_kernels(use_kernel):
+        return _paged_flash(q, k_pages, v_pages, block_table, kv_len,
+                            q_offset, block_q=block_q,
+                            interpret=not _on_tpu())
+    return _ref.paged_flash_attention_ref(q, k_pages, v_pages, block_table,
+                                          kv_len, q_offset)
+
+
+def decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                     k_new=None, v_new=None, write_pages=None,
+                     write_offsets=None, use_kernel: Optional[bool] = None):
+    """q: (B, Hq, D); pages: (P, page, Hkv, D); table: (B, max_pages).
+
+    With ``k_new/v_new/write_pages/write_offsets`` the decode-side KV write
+    is fused: the new token's KV (``(B, Hkv, D)``, slot contract: position
+    ``lengths - 1``) lands in the pool inside the call and the result is
+    ``(o, k_pages, v_pages)``. Without them: plain read-only attention,
+    returns ``o``.
+    """
+    fused = k_new is not None
+    if _use_kernels(use_kernel):
+        if fused:
+            return _paged_fused(q, k_pages, v_pages, block_table, lengths,
+                                k_new, v_new, write_pages, write_offsets,
+                                interpret=not _on_tpu())
         return _paged(q, k_pages, v_pages, block_table, lengths,
                       interpret=not _on_tpu())
+    if fused:
+        k_pages = k_pages.at[write_pages, write_offsets].set(k_new)
+        v_pages = v_pages.at[write_pages, write_offsets].set(v_new)
+        o = _ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                     lengths)
+        return o, k_pages, v_pages
     return _ref.paged_attention_ref(q, k_pages, v_pages, block_table, lengths)
 
 

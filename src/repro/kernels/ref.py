@@ -66,6 +66,46 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, lengths):
     return o.reshape(B, Hq, D).astype(q.dtype)
 
 
+def paged_flash_attention_ref(q, k_pages, v_pages, block_table, kv_len,
+                              q_offset):
+    """Chunked-prefill attention over paged KV (oracle for
+    ``paged_flash_attention`` — this one *does* gather; it is the ground
+    truth and the CPU math path, not the hot path).
+
+    q: (B, Hq, Sq, D); k/v_pages: (P, page, Hkv, D); block_table: (B, Np)
+    int32; kv_len: (B,) int32 valid kv tokens; q_offset: (B,) int32 absolute
+    position of each row's first query. Returns (B, Hq, Sq, D).
+
+    The math mirrors ``models.layers.mha`` op for op (same einsum
+    contractions, post-einsum scale, -1e30 mask, ``jax.nn.softmax``) so the
+    paged prefill path stays *bit-identical* on CPU to the legacy
+    gather-then-dense-step path: on real rows the causal mask alone already
+    bounds kv at the query position, so adding the ``kv_len`` cut (which
+    hides scratch-page and stale-tail garbage from padded rows) changes no
+    unmasked entry, and masked scores underflow to exactly 0 weight.
+    """
+    B, Hq, Sq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    Np = block_table.shape[1]
+    G = Hq // Hkv
+    S = Np * page
+    k = k_pages[block_table].reshape(B, S, Hkv, D)   # model (B, Skv, Hkv, D)
+    v = v_pages[block_table].reshape(B, S, Hkv, D)
+    qm = q.transpose(0, 2, 1, 3)                     # model (B, Sq, Hq, D)
+    qg = qm.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(F32),
+                        k.astype(F32)) * (D ** -0.5)
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None]          # (B, Sq)
+    kv_pos = jnp.arange(S)
+    mask = (kv_pos[None, None, :] <= q_pos[:, :, None]) & \
+           (kv_pos[None, None, :] < kv_len[:, None, None])    # (B, Sq, S)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(F32))
+    out = out.reshape(B, Sq, Hq, D).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3)
+
+
 def wkv6_ref(r, k, v, w, u, state):
     """Sequential WKV6 recurrence (the mathematical definition).
 

@@ -179,7 +179,9 @@ def attention(q, k, v, q_pos, kv_pos, *, kv_valid=None, causal: bool = True,
     return jnp.moveaxis(ob, 0, 1).reshape(B, Sq, H, D)
 
 
-def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           k_new=None, v_new=None, write_pages=None,
+                           write_offsets=None):
     """Single-token decode attention over a paged KV pool.
 
     q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); block_table: (B, max_pages)
@@ -188,9 +190,33 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
     scalar-prefetched so the page index_map steers HBM->VMEM DMA) and to the
     jnp gather oracle elsewhere. No sliding-window / softcap support — the
     paged layout is gated on configs without them.
+
+    With ``k_new/v_new (B, Hkv, D)`` + ``write_pages/write_offsets (B,)``
+    the new token's KV write is fused into the kernel (slot contract:
+    position ``lengths - 1``) and the result is ``(o, k_pages, v_pages)``.
     """
     from repro.kernels import ops                  # lazy: keeps layers cheap
-    return ops.decode_attention(q, k_pages, v_pages, block_table, lengths)
+    return ops.decode_attention(q, k_pages, v_pages, block_table, lengths,
+                                k_new=k_new, v_new=v_new,
+                                write_pages=write_pages,
+                                write_offsets=write_offsets)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, kv_len,
+                            q_offset):
+    """Gather-free chunked-prefill attention over a paged KV pool.
+
+    q: (B, Sq, Hq, D) **model layout**; k/v_pages: (P, page, Hkv, D);
+    block_table: (B, Np) int32 pool pages in token order (scratch-padded);
+    kv_len: (B,) valid kv tokens (the chunk's own KV already scattered in);
+    q_offset: (B,) absolute position of each row's first query. Returns
+    (B, Sq, Hq, D). Kernel path reads pages in place via the prefetched
+    table; the CPU oracle reproduces ``mha``'s math bit for bit.
+    """
+    from repro.kernels import ops                  # lazy: keeps layers cheap
+    o = ops.prefill_attention(q.transpose(0, 2, 1, 3), k_pages, v_pages,
+                              block_table, kv_len, q_offset)
+    return o.transpose(0, 2, 1, 3)
 
 
 def init_attn(cfg: ModelConfig, key, dtype) -> Params:

@@ -23,7 +23,8 @@ from repro.models import layers as L
 from repro.models.layers import (ParallelCtx, apply_norm, attention, attn_out,
                                  attn_qkv, constrain, init_attn, init_mlp,
                                  init_moe, init_norm, mha, mlp, moe_ffn,
-                                 moe_ffn_ep_local, paged_decode_attention)
+                                 moe_ffn_ep_local, paged_decode_attention,
+                                 paged_prefill_attention)
 
 F32 = jnp.float32
 
@@ -329,7 +330,10 @@ def lm_decode_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
     block_tables: (B, max_pages) int32 device page ids in token order;
     lengths: (B,) valid kv tokens AFTER this step's write (pos + 1);
     write_pages/write_offsets: (B,) — the page/slot each lane's new KV
-    lands in (idle lanes point at the scratch page).
+    lands in (idle lanes point at the scratch page). The slot must be the
+    table position of sequence index ``lengths - 1`` (the fused kernel's
+    write/read contract; idle lanes satisfy it degenerately with length 1
+    and an all-scratch table row).
     Returns (logits (B, V), updated cache).
     """
     assert supports_paged(cfg), "paged decode: unsupported attention variant"
@@ -342,9 +346,13 @@ def lm_decode_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
         lp, k_l, v_l = scanned                        # k/v_l: (P, page, H, D)
         h = apply_norm(cfg, lp["ln_attn"], x)
         q, k_new, v_new = attn_qkv(cfg, lp["attn"], h, q_pos)
-        k_l = k_l.at[write_pages, write_offsets].set(k_new[:, 0])
-        v_l = v_l.at[write_pages, write_offsets].set(v_new[:, 0])
-        o = paged_decode_attention(q[:, 0], k_l, v_l, block_tables, lengths)
+        # KV write fused into the attention dispatch (kernel prologue on
+        # the Pallas path; scatter-then-attend on the jnp oracle path —
+        # bitwise the old separate-scatter math)
+        o, k_l, v_l = paged_decode_attention(
+            q[:, 0], k_l, v_l, block_tables, lengths,
+            k_new=k_new[:, 0], v_new=v_new[:, 0],
+            write_pages=write_pages, write_offsets=write_offsets)
         o = attn_out(lp["attn"], o[:, None])
         if cfg.post_sublayer_norm:
             o = apply_norm(cfg, lp["ln_post_attn"], o)
@@ -366,21 +374,75 @@ def lm_decode_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
 
 
 def lm_prefill_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
-                     positions, table, write_pages, write_offsets, *,
+                     positions, table, write_pages, write_offsets, kv_len, *,
                      pctx: Optional[ParallelCtx] = None):
-    """Chunked prefill of ONE sequence against the page pool.
+    """Chunked prefill of ONE sequence against the page pool, gather-free.
 
     tokens/positions: (1, C) — absolute positions; padded lanes sit at
-    ``Np*page - 1`` (the tail of the gathered view, which the table maps to
-    the scratch page). table: (Np,) page ids covering the sequence's lease
-    in token order, scratch-padded, with the LAST entry always scratch.
-    write_pages/write_offsets: (C,) destination of each chunk token's KV.
+    ``Np*page - 1`` (which the table maps to the scratch page). table:
+    (Np,) page ids covering the sequence's lease in token order,
+    scratch-padded, with the LAST entry always scratch.
+    write_pages/write_offsets: (C,) destination of each chunk token's KV
+    (padded lanes: the scratch page). kv_len: () int32 — valid kv tokens
+    after this chunk (chunk start + real chunk tokens), traced so chunk
+    starts never recompile.
 
-    The gathered view ``pages[table]`` IS the contiguous context (lease
-    order == token order), so dense ``lm_step`` runs unchanged on it —
-    exact chunked-prefill semantics against previously cached (possibly
-    *shared*) prefix pages — and only the chunk's own KV is scattered back,
-    one (page, offset) per token. Returns (logits (1, C, V), cache).
+    Per layer the chunk's KV is scattered into its leased pages FIRST, then
+    ``paged_prefill_attention`` reads every page **in place** via the
+    scalar-prefetched table — the read side never materializes a dense
+    ``pages[table]`` view (the O(context)-bytes-per-chunk copy the legacy
+    ``lm_prefill_paged_gather`` pays). Exact semantics: queries at absolute
+    positions, causal over the previously cached (possibly *shared*) prefix
+    + the chunk itself, stale/scratch slots masked by ``kv_len``.
+    Returns (logits (1, C, V), cache).
+    """
+    assert supports_paged(cfg), "paged prefill: unsupported attention variant"
+    x = _embed(cfg, params, tokens)                   # (1, C, D)
+    x = constrain(x, pctx, _decode_dp(pctx, 1), None, None)
+    q_pos = positions
+    q_offset = positions[:, 0]                        # (1,) chunk start
+    kv_len_b = jnp.reshape(kv_len, (1,)).astype(jnp.int32)
+    table_b = table[None]                             # (1, Np)
+
+    def body(x, scanned):
+        lp, k_l, v_l = scanned                        # k/v_l: (P, page, H, D)
+        h = apply_norm(cfg, lp["ln_attn"], x)
+        q, k_new, v_new = attn_qkv(cfg, lp["attn"], h, q_pos)
+        k_l = k_l.at[write_pages, write_offsets].set(k_new[0])
+        v_l = v_l.at[write_pages, write_offsets].set(v_new[0])
+        o = paged_prefill_attention(q, k_l, v_l, table_b, kv_len_b, q_offset)
+        o = attn_out(lp["attn"], o)
+        if cfg.post_sublayer_norm:
+            o = apply_norm(cfg, lp["ln_post_attn"], o)
+        x = x + o
+        h2 = apply_norm(cfg, lp["ln_mlp"], x)
+        if cfg.family == "moe":
+            f = _moe_block(cfg, lp, h2, pctx)
+        else:
+            f = mlp(cfg, lp["mlp"], h2, pctx)
+        if cfg.post_sublayer_norm:
+            f = apply_norm(cfg, lp["ln_post_mlp"], f)
+        x = x + f
+        return x, (k_l, v_l)
+
+    x, (ks, vs) = _uscan(body, x, (params["layers"], cache.k, cache.v))
+    x = apply_norm(cfg, params["ln_final"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, PagedKVCache(ks, vs)
+
+
+def lm_prefill_paged_gather(cfg: ModelConfig, params, cache: PagedKVCache,
+                            tokens, positions, table, write_pages,
+                            write_offsets, *,
+                            pctx: Optional[ParallelCtx] = None):
+    """Legacy chunked prefill: gather the lease into a dense view, run the
+    dense ``lm_step`` on it, scatter the chunk's KV back.
+
+    Exact but O(context) HBM bytes per chunk (gather read + dense-copy
+    write + kernel read). Kept as the bit-exactness baseline for
+    ``lm_prefill_paged`` (tests) and the accounting baseline for the
+    ``prefill_hbm_bytes_per_chunk`` bench figure. Same argument layout as
+    ``lm_prefill_paged`` minus ``kv_len``.
     """
     assert supports_paged(cfg), "paged prefill: unsupported attention variant"
     page = cache.page_size

@@ -41,7 +41,12 @@ _COUNTER_FIELDS = (("free_blocks", "kv free blocks"),
                    ("active_tools", "active tools"),
                    ("waiting", "admission queue"),
                    ("host_used", "host tier blocks"),
-                   ("disk_used", "disk tier blocks"))
+                   ("disk_used", "disk tier blocks"),
+                   # live-backend prefill HBM traffic (cumulative): what
+                   # the legacy gather path would have touched vs what the
+                   # gather-free (block-table steered) path touches
+                   ("prefill_gather_bytes", "prefill gather bytes"),
+                   ("prefill_inplace_bytes", "prefill in-place bytes"))
 
 
 def _segment_counts(tr) -> Dict[str, int]:

@@ -140,3 +140,183 @@ def test_ops_dispatch():
     a = ops.attention(q, k, k, use_kernel=True)
     b = ops.attention(q, k, k, use_kernel=False)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# --- gather-free paged prefill -------------------------------------------
+
+def _paged_prefill_case(seed, B, Hq, Hkv, D, page, P, Np, Sq):
+    """Random chunked-prefill instance: tables with duplicate (shared)
+    pages, kv_len short of the table capacity (scratch tail positions point
+    at live pool pages whose content must not leak), nonzero q_offset."""
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D), jnp.float32)
+    # draw from a small id range so duplicates (physically shared pages)
+    # show up within and across rows
+    table = jnp.asarray(rng.integers(0, min(P, 4), (B, Np)), jnp.int32)
+    kv_len = jnp.asarray(
+        rng.integers(Sq, (Np - 1) * page + 1, (B,)), jnp.int32)
+    q_offset = (kv_len - Sq).astype(jnp.int32)
+    return q, kp, vp, table, kv_len, q_offset
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,page,P,Np,Sq,block_q", [
+    (2, 4, 2, 64, 32, 8, 4, 64, 32),
+    (1, 8, 8, 64, 16, 6, 6, 64, 64),
+    (2, 2, 1, 128, 32, 8, 4, 32, 32),
+    (1, 4, 2, 64, 32, 8, 8, 96, 32),   # 8-page context, multi-block chunk
+])
+def test_paged_flash_attention_vs_ref(B, Hq, Hkv, D, page, P, Np, Sq,
+                                      block_q):
+    from repro.kernels.paged_flash_attention import paged_flash_attention
+    q, kp, vp, table, kv_len, q_offset = _paged_prefill_case(
+        B * 31 + Np, B, Hq, Hkv, D, page, P, Np, Sq)
+    out = paged_flash_attention(q, kp, vp, table, kv_len, q_offset,
+                                block_q=block_q)
+    want = ref.paged_flash_attention_ref(q, kp, vp, table, kv_len, q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_paged_flash_attention_vs_dense_flash():
+    """Contiguous tables over distinct pages == dense flash attention."""
+    from repro.kernels.paged_flash_attention import paged_flash_attention
+    B, Hq, Hkv, D, page, Np, Sq = 2, 4, 2, 64, 32, 4, 64
+    S = Np * page
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    # pool layout: page p of row b lives at pool id b*Np + p
+    kp = k.transpose(0, 2, 1, 3).reshape(B * Np, page, Hkv, D)
+    vp = v.transpose(0, 2, 1, 3).reshape(B * Np, page, Hkv, D)
+    table = jnp.arange(B * Np, dtype=jnp.int32).reshape(B, Np)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    q_offset = jnp.full((B,), S - Sq, jnp.int32)
+    out = paged_flash_attention(q, kp, vp, table, kv_len, q_offset,
+                                block_q=32)
+    want = flash_attention(q, k, v, causal=True, q_offset=S - Sq,
+                           block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_paged_flash_attention_shared_prefix_rows():
+    """Two rows whose tables point at the same physical prefix pages must
+    see identical prefix keys (CoW families dup table entries, not pages)."""
+    from repro.kernels.paged_flash_attention import paged_flash_attention
+    B, Hq, Hkv, D, page, P, Np, Sq = 2, 4, 2, 64, 32, 8, 4, 32
+    ks = jax.random.split(KEY, 3)
+    q0 = jax.random.normal(ks[0], (1, Hq, Sq, D), jnp.float32)
+    q = jnp.concatenate([q0, q0], axis=0)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D), jnp.float32)
+    # shared prefix pages 0..2, divergent tails 3 vs 4 — but kv_len stops
+    # inside the shared prefix, so both rows attend to identical context
+    table = jnp.asarray([[0, 1, 2, 3], [0, 1, 2, 4]], jnp.int32)
+    kv_len = jnp.full((B,), 3 * page, jnp.int32)
+    q_offset = kv_len - Sq
+    out = paged_flash_attention(q, kp, vp, table, kv_len, q_offset,
+                                block_q=32)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+
+@pytest.mark.parametrize("Sq,block_q", [(100, 64), (65, 64), (1, 64)])
+def test_flash_attention_ragged_q(Sq, block_q):
+    """Final q block may be ragged: Sq need not divide block_q."""
+    ks = jax.random.split(KEY, 3)
+    Skv = 128
+    q = jax.random.normal(ks[0], (1, 4, Sq, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, Skv, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, Skv, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=Skv - Sq,
+                          block_q=block_q, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=Skv - Sq)
+    assert out.shape == (1, 4, Sq, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("Sq,block_q", [(33, 32), (7, 32)])
+def test_paged_flash_attention_ragged_q(Sq, block_q):
+    from repro.kernels.paged_flash_attention import paged_flash_attention
+    q, kp, vp, table, kv_len, q_offset = _paged_prefill_case(
+        11, 2, 4, 2, 64, 32, 8, 4, Sq)
+    out = paged_flash_attention(q, kp, vp, table, kv_len, q_offset,
+                                block_q=block_q)
+    want = ref.paged_flash_attention_ref(q, kp, vp, table, kv_len, q_offset)
+    assert out.shape == q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# --- fused decode KV write -----------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,page,P,maxp", [
+    (4, 8, 2, 64, 32, 64, 8),
+    (2, 4, 4, 128, 16, 32, 4),
+    (3, 6, 2, 64, 8, 40, 10),
+])
+def test_paged_attention_fused_write(B, Hq, Hkv, D, page, P, maxp):
+    """Fused kernel == scatter-then-attend, and only the write slots moved."""
+    from repro.kernels.paged_attention import paged_attention_fused
+    rng = np.random.default_rng(B * 13 + P)
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D), jnp.float32)
+    k_new = jax.random.normal(ks[3], (B, Hkv, D), jnp.float32)
+    v_new = jax.random.normal(ks[4], (B, Hkv, D), jnp.float32)
+    # distinct pages per row so the slot contract is unambiguous
+    pages = rng.choice(P, (B, maxp), replace=False).astype(np.int32)
+    table = jnp.asarray(pages, jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, maxp * page + 1, (B,)), jnp.int32)
+    wp = table[jnp.arange(B), (lengths - 1) // page]
+    wo = ((lengths - 1) % page).astype(jnp.int32)
+    out, kp2, vp2 = paged_attention_fused(q, kp, vp, table, lengths,
+                                          k_new, v_new, wp, wo)
+    kp_want = kp.at[wp, wo].set(k_new)
+    vp_want = vp.at[wp, wo].set(v_new)
+    want = ref.paged_attention_ref(q, kp_want, vp_want, table, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    # pool state: write slots carry the new token, everything else intact
+    np.testing.assert_array_equal(np.asarray(kp2), np.asarray(kp_want))
+    np.testing.assert_array_equal(np.asarray(vp2), np.asarray(vp_want))
+
+
+def test_ops_fused_decode_dispatch():
+    """ops.decode_attention with fused write: kernel vs ref path agree on
+    output and on the returned pool state."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(3)
+    ks = jax.random.split(KEY, 5)
+    B, Hq, Hkv, D, page, P, maxp = 2, 4, 2, 64, 16, 16, 4
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D), jnp.float32)
+    k_new = jax.random.normal(ks[3], (B, Hkv, D), jnp.float32)
+    v_new = jax.random.normal(ks[4], (B, Hkv, D), jnp.float32)
+    table = jnp.asarray(rng.choice(P, (B, maxp), replace=False), jnp.int32)
+    lengths = jnp.asarray([30, 50], jnp.int32)
+    wp = table[jnp.arange(B), (lengths - 1) // page]
+    wo = ((lengths - 1) % page).astype(jnp.int32)
+    oa, ka, va = ops.decode_attention(q, kp, vp, table, lengths,
+                                      k_new=k_new, v_new=v_new,
+                                      write_pages=wp, write_offsets=wo,
+                                      use_kernel=True)
+    ob, kb, vb = ops.decode_attention(q, kp, vp, table, lengths,
+                                      k_new=k_new, v_new=v_new,
+                                      write_pages=wp, write_offsets=wo,
+                                      use_kernel=False)
+    np.testing.assert_allclose(np.asarray(oa), np.asarray(ob), atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_ops_prefill_dispatch():
+    from repro.kernels import ops
+    q, kp, vp, table, kv_len, q_offset = _paged_prefill_case(
+        5, 2, 4, 2, 64, 32, 8, 4, 64)
+    a = ops.prefill_attention(q, kp, vp, table, kv_len, q_offset,
+                              use_kernel=True)
+    b = ops.prefill_attention(q, kp, vp, table, kv_len, q_offset,
+                              use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -210,6 +210,70 @@ def test_paged_duplicate_and_cow_tail_parity():
 
 
 # ---------------------------------------------------------------------------
+# transformer-level: gather-free prefill is bit-identical to the gather path
+# ---------------------------------------------------------------------------
+
+def test_lm_prefill_paged_bitwise_matches_gather():
+    """``lm_prefill_paged`` (block-table indirection, in-place page reads)
+    must produce bit-identical logits and cache pages to the legacy
+    ``lm_prefill_paged_gather`` (dense gather/scatter) on the CPU math
+    path — across chunked prefill, physically shared prefix pages between
+    two sequences, scratch-padded tables, and a ragged (padded) final
+    chunk. Scratch-page content is the one allowed divergence."""
+    import jax.numpy as jnp
+
+    from repro.models import transformer as tf
+    cfg = _reduced_cfg()
+    params = tf.init_lm(cfg, jax.random.PRNGKey(0), jnp.float32)
+    page, P, Np = 32, 8, 4
+    scratch = P - 1
+    cache_g = tf.PagedKVCache.zeros(cfg, P, page, jnp.float32)
+    cache_n = tf.PagedKVCache.zeros(cfg, P, page, jnp.float32)
+    rng = np.random.default_rng(17)
+
+    def chunk(cache_g, cache_n, start, n_real, table, lane=32):
+        toks = np.zeros(lane, np.int32)
+        toks[:n_real] = rng.integers(1, 97, n_real)
+        pos = np.arange(start, start + lane, dtype=np.int32)
+        pos[n_real:] = Np * page - 1          # padded lanes -> scratch slot
+        wp = np.where(np.arange(lane) < n_real,
+                      np.asarray(table)[(start + np.arange(lane)) // page],
+                      scratch).astype(np.int32)
+        wo = np.where(np.arange(lane) < n_real,
+                      (start + np.arange(lane)) % page,
+                      np.arange(lane) % page).astype(np.int32)
+        args = (jnp.asarray(toks)[None], jnp.asarray(pos)[None],
+                jnp.asarray(table, jnp.int32), jnp.asarray(wp),
+                jnp.asarray(wo))
+        lg, cache_g = tf.lm_prefill_paged_gather(cfg, params, cache_g, *args)
+        ln, cache_n = tf.lm_prefill_paged(
+            cfg, params, cache_n, *args,
+            jnp.asarray(start + n_real, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(lg[:, :n_real]),
+                                      np.asarray(ln[:, :n_real]))
+        live = [p for p in range(P) if p != scratch]
+        np.testing.assert_array_equal(np.asarray(cache_g.k[:, live]),
+                                      np.asarray(cache_n.k[:, live]))
+        np.testing.assert_array_equal(np.asarray(cache_g.v[:, live]),
+                                      np.asarray(cache_n.v[:, live]))
+        return cache_g, cache_n
+
+    # sequence A: three full chunks over pages [0, 1, 2]
+    table_a = [0, 1, 2, scratch]
+    for start in (0, 32, 64):
+        cache_g, cache_n = chunk(cache_g, cache_n, start, 32, table_a)
+    # sequence B: attaches A's pages [0, 1] as a physically shared prefix
+    # and prefills only its private tail chunk into page 4
+    table_b = [0, 1, 4, scratch]
+    cache_g, cache_n = chunk(cache_g, cache_n, 64, 32, table_b)
+    # sequence C: ragged final chunk — 16 real tokens in a 32-lane chunk,
+    # padded lanes parked on the scratch page
+    table_c = [5, 6, scratch, scratch]
+    cache_g, cache_n = chunk(cache_g, cache_n, 0, 32, table_c)
+    cache_g, cache_n = chunk(cache_g, cache_n, 32, 16, table_c)
+
+
+# ---------------------------------------------------------------------------
 # sim-level: per-block offload accounting
 # ---------------------------------------------------------------------------
 
