@@ -29,6 +29,11 @@ the host "crossings" are cheap, so the serialized column understates what
 a PCIe-attached accelerator would show — the assert is the regression
 guard, the comparison is the point).
 
+All three runs pin ``EngineConfig(scheduler="round")``: the median-over-
+comparable-ticks methodology needs round-granular decode quanta, and the
+swap stream's overlap behaviour is orthogonal to iteration-level batching
+(which ``continuous_batching_bench`` measures on its own terms).
+
 ``--dry`` (CI smoke): tiny populations, one round — exercises all three
 configurations end to end without timing-grade sizes.
 """
@@ -67,9 +72,16 @@ def _run(name: str, *, K: int, M: int, pages: int, slots: int,
     cfg = get_config("llama3.2-1b").reduced()
     backend = JaxBackend(cfg, layout="paged", max_slots=slots, max_len=1024,
                          total_pages=pages, async_swap=async_swap)
+    # Pinned to the round scheduler: the figure isolates the swap stream,
+    # and its methodology (medians over comparable g-token decode ticks)
+    # needs round-granular tick shapes. Under the mixed default the tick
+    # population is 1-token iterations whose timing distribution is not
+    # comparable across the three runs on a wall-clock CPU runner. This
+    # also keeps the scheduler="round" compat path exercised in CI.
     eng = Engine(EngineConfig(total_kv_blocks=pages - 16, block_size=32,
                               token_budget=4096, max_decode_batch=slots,
-                              decode_granularity=8, cpu_slots=4),
+                              decode_granularity=8, cpu_slots=4,
+                              scheduler="round"),
                  "fcfs", backend)
     eng.policy.on_tool_yield = lambda s, now: (KVAction.OFFLOAD, 0.0)
     # per-tick record: (elapsed, n_decodes, n_prefills, n_swap_entries)

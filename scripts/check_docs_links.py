@@ -1,0 +1,23 @@
+#!/usr/bin/env python
+"""Docs hygiene gate: every relative markdown link in README.md and
+docs/*.md must resolve to a real file/directory in the repo. External
+http(s) links, mailto:, and pure #anchors are skipped."""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+bad = []
+for md in [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]:
+    for target in LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        if not (md.parent / target.split("#", 1)[0]).resolve().exists():
+            bad.append(f"{md.relative_to(ROOT)}: dead link -> {target}")
+for b in bad:
+    print("FAIL  " + b)
+if bad:
+    sys.exit(1)
+print("docs links ok")

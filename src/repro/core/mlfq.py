@@ -58,11 +58,28 @@ class PriorityCoordinator:
         level + bounded geometric service demotion - bounded wait promotion."""
         c = self.cfg
         lvl = self.base_level(s)
-        demote = int(math.log2(1.0 + s.service_tokens / c.level_quantum_tokens))
-        lvl += min(c.max_demotion, demote)
+        lvl += self._demotion(s.service_tokens)
         waited = max(0.0, now - max(s.last_service, s.admitted_at))
         promo = min(c.max_promotion, int(waited / c.promote_after))
         return max(0, min(c.n_levels - 1, lvl - promo))
+
+    def _demotion(self, service_tokens: float) -> int:
+        """Bounded geometric demotion for an accumulated service total."""
+        c = self.cfg
+        demote = int(math.log2(1.0 + service_tokens / c.level_quantum_tokens))
+        return min(c.max_demotion, demote)
+
+    def charge(self, s: Session, tokens: int) -> int:
+        """Quantum-by-token accounting: charge the *actual* tokens
+        dispatched this iteration against the session's service quanta and
+        return the bounded demotion level after the charge. Under
+        iteration-level batching this runs once per token per lane, so a
+        session demotes at the exact iteration its cumulative service
+        crosses a quantum boundary — round-granular charging (one lump of
+        ``decode_granularity`` tokens) could overshoot the boundary by up
+        to g-1 tokens before the demotion lands."""
+        s.service_tokens += tokens
+        return self._demotion(s.service_tokens)
 
     def priority_key(self, s: Session, now: float):
         """Sort key: (level, FIFO-within-level). Short or lightly-served

@@ -76,6 +76,19 @@ class Policy:
     def order(self, ready: Sequence[Session], now: float) -> List[Session]:
         return sorted(ready, key=lambda s: s.arrival_time)
 
+    # --- iteration-level batching hooks -------------------------------------
+    def prefill_budget(self, token_budget: int, decode_tokens: int) -> int:
+        """Prefill token budget for one mixed iteration, given the tokens
+        the decode lanes already claimed. Baselines: whatever the decodes
+        left (no split — prefill waves may inflate the iteration)."""
+        return max(0, token_budget - decode_tokens)
+
+    def charge_service(self, s: Session, tokens: int, now: float) -> None:
+        """Charge ``tokens`` of GPU service dispatched this iteration.
+        Baselines: plain accumulation. MARS routes this through the MLFQ's
+        quantum-by-token accounting."""
+        s.service_tokens += tokens
+
     # --- tool boundary --------------------------------------------------------
     def on_tool_yield(self, s: Session, now: float) -> Tuple[KVAction, float]:
         return KVAction.FREE, 0.0
@@ -282,6 +295,18 @@ class MARSPolicy(Policy):
         if self.cfg.disable_coordinator:
             return sorted(ready, key=lambda s: s.arrival_time)
         return self.coord.order(ready, now)
+
+    def charge_service(self, s, tokens, now):
+        if self.cfg.disable_coordinator:
+            super().charge_service(s, tokens, now)
+            return
+        self.coord.charge(s, tokens)
+
+    # opportunistic co-scheduler: prefill/decode budget split per iteration
+    def prefill_budget(self, token_budget, decode_tokens):
+        if self.cfg.disable_coscheduler:
+            return super().prefill_budget(token_budget, decode_tokens)
+        return self.cosched.split_budget(token_budget, decode_tokens)
 
     def eviction_order(self, victims, now, requester=None):
         if self.cfg.disable_coordinator:

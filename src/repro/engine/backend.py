@@ -35,6 +35,11 @@ class BatchWork:
     it launched on its background stream (sid -> future), and the engine
     attaches those to the host tier right after the batch returns so
     ``HostTier.ready`` gates restores on the real drain, not the model.
+
+    ``mixed`` marks an iteration-level continuous-batching tick (decode
+    lanes carry exactly one token each): a physical backend should fuse the
+    prefill chunks and decode lanes into a single dispatch rather than
+    looping per-session.
     """
     decodes: List[Tuple[Session, int]]        # (session, n_tokens this quantum)
     prefills: List[Tuple[Session, int]]       # (session, chunk_tokens)
@@ -43,6 +48,7 @@ class BatchWork:
     leases: Dict[int, Tuple[int, ...]] = None   # sid -> block table snapshot
     cow_copies: List[Tuple[int, int, int]] = None  # (sid, src, dst) in order
     swap_futures: Dict[int, object] = None      # sid -> TransferFuture (D2H)
+    mixed: bool = False                         # iteration-level tick
 
     def __post_init__(self):
         if self.swapouts is None:

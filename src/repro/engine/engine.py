@@ -1,6 +1,13 @@
 """Continuous-batching engine with MARS-style decoupled control.
 
-One ``tick`` is one engine iteration:
+One ``tick`` is one engine **iteration**. Under the default
+``scheduler="mixed"`` (token-level continuous batching) a tick forms one
+*mixed* batch: every in-flight decode session contributes exactly one
+token and new sessions' chunked-prefill tokens ride along in the same
+backend dispatch, so batch membership changes — sessions join, leave, are
+preempted — at token granularity. ``scheduler="round"`` keeps the legacy
+round-granular loop (``decode_granularity``-token decode quanta, prefills
+fill whatever budget the decodes left) as the parity baseline.
 
     1. drain tool completions (unified info stream)      -> sessions resume
     2. O(1) block-pool + host-tier + backlog probe       -> telemetry
@@ -9,14 +16,21 @@ One ``tick`` is one engine iteration:
     4. pin re-evaluation (adaptive four-way retention / TTL expiry):
        revoked pins drop, or demote to host DRAM or the NVMe cold tier;
        tiered-store upkeep demotes cold host entries to NVMe
-    5. batch formation: decodes first (priority order), then chunked
-       prefills under the token budget; chunk shrinking; pinned KV is
-       reclaimed (drop or offload) before any running victim is preempted;
-       completed host transfers drain back as swap-ins (NVMe entries
-       promote back through host DRAM first — the staged restore)
-    6. backend.run_batch (sim: modeled seconds; jax: wall seconds)
-    7. bookkeeping: TTFT per round, tool yields + retention decisions,
-       completion accounting
+    5. batch formation: decode continuations first (priority order, one
+       token each in mixed mode), then chunked prefills under the
+       policy's prefill/decode token-budget split (mixed mode caps the
+       prefill share per iteration so a prefill wave can never inflate
+       the inter-token latency of running decodes); chunk shrinking;
+       pinned KV is reclaimed (drop or offload) before any running victim
+       is preempted; completed host transfers drain back as swap-ins
+       (NVMe entries promote back through host DRAM first — the staged
+       restore)
+    6. backend.run_batch — ONE dispatch for the whole mixed batch (sim:
+       modeled seconds; jax: wall seconds, prefill packs + decode lanes
+       fused into a single jitted call on the paged layout)
+    7. bookkeeping: TTFT per round, per-iteration MLFQ service charging
+       (quantum-by-token), tool yields + retention decisions, completion
+       accounting
 
 The same loop drives the discrete-event simulator and the live JAX engine —
 only the backend, the tool executor, and the clock differ.
@@ -50,7 +64,12 @@ class EngineConfig:
     block_size: int = 32
     token_budget: int = 8192          # per-tick prefill+decode token budget
     max_decode_batch: int = 64
-    decode_granularity: int = 8
+    decode_granularity: int = 8       # round mode only; mixed always uses 1
+    # "mixed" = iteration-level continuous batching (default): one token
+    # per decode lane per tick, prefill chunks ride along under the
+    # policy's prefill/decode budget split, one fused backend dispatch.
+    # "round" = legacy round-granular scheduling (parity baseline).
+    scheduler: str = "mixed"
     cpu_slots: int = 16
     telem: TelemetryConfig = None     # derived from cpu_slots if None
     enable_prefix_sharing: bool = True  # radix index over prefix chunk hashes
@@ -69,6 +88,10 @@ class EngineConfig:
     def __post_init__(self):
         if self.telem is None:
             self.telem = TelemetryConfig(cpu_slots=self.cpu_slots)
+        if self.scheduler not in ("mixed", "round"):
+            raise ValueError(
+                f"scheduler must be 'mixed' or 'round', got "
+                f"{self.scheduler!r}")
 
 
 class Engine:
@@ -342,6 +365,11 @@ class Engine:
                         "bookkeep": t5 - t4},
                 n_decodes=len(work.decodes), n_prefills=len(work.prefills),
                 n_swapins=len(work.swapins), n_swapouts=len(work.swapouts),
+                # MIXED_BATCH fields: scheduler mode + token composition of
+                # this iteration's dispatch (decode lanes vs prefill chunks)
+                mixed=work.mixed,
+                decode_tokens=sum(g for _, g in work.decodes),
+                prefill_tokens=sum(cch for _, cch in work.prefills),
                 active=len(self.active), waiting=len(self.waiting),
                 free_blocks=self.blocks.free,
                 active_tools=self.telem.active_tools,
@@ -729,6 +757,7 @@ class Engine:
     # ------------------------------------------------------------------
     def _form_batch(self, now: float) -> BatchWork:
         c = self.cfg
+        mixed = c.scheduler == "mixed"
         ready = [s for s in self.active
                  if s.phase in (Phase.READY_PREFILL, Phase.DECODING)]
         order = self.policy.order(ready, now)
@@ -737,13 +766,18 @@ class Engine:
         swapins: List[Tuple[Session, int]] = []
         in_batch: Set[int] = set()
         budget = c.token_budget
+        # mixed mode: every decode lane advances exactly one token per
+        # iteration, so batch membership (join/leave/preempt) is decided
+        # at token granularity; round mode bursts decode_granularity-token
+        # quanta (the parity baseline).
+        quantum = 1 if mixed else c.decode_granularity
 
         # decodes first: latency-sensitive continuations. Decode extensions
         # may preempt (they must make progress to ever release memory).
         for s in order:
             if s.phase != Phase.DECODING or len(decodes) >= c.max_decode_batch:
                 continue
-            g = min(c.decode_granularity, s.cur.decode_tokens - s.decoded, budget)
+            g = min(quantum, s.cur.decode_tokens - s.decoded, budget)
             if g <= 0:
                 continue
             need, cow = self._write_need(s, g)
@@ -757,7 +791,16 @@ class Engine:
             budget -= g
 
         # prefills / swap-ins fill the remaining budget from free blocks and
-        # reclaimable pins only (no preemption).
+        # reclaimable pins only (no preemption). Mixed mode additionally
+        # caps the prefill share of this iteration via the policy's
+        # prefill/decode budget split, so a prefill-heavy arrival wave can
+        # never inflate the inter-token latency of the decode lanes riding
+        # in the same dispatch.
+        if mixed:
+            decode_toks = sum(g for _, g in decodes)
+            budget = min(budget,
+                         self.policy.prefill_budget(c.token_budget,
+                                                    decode_toks))
         for s in order:
             if s.phase != Phase.READY_PREFILL or budget <= 0:
                 continue
@@ -768,7 +811,9 @@ class Engine:
                 budget -= prefills[-1][1]
         # stall escape hatch: pool exhausted by partial holders and nothing
         # scheduled -> serve the single top-priority ready session, allowing
-        # preemption of strictly junior work (deadlock freedom).
+        # preemption of strictly junior work (deadlock freedom). Uses the
+        # full token budget: with an empty batch there are no decode lanes
+        # to protect, so the split does not apply.
         if not decodes and not prefills and not swapins:
             for s in order:
                 if s.phase != Phase.READY_PREFILL:
@@ -777,7 +822,7 @@ class Engine:
                                      prefills, swapins, allow_preempt=True):
                     break
         swapouts, self._pending_swapouts = self._pending_swapouts, []
-        work = BatchWork(decodes, prefills, swapins, swapouts)
+        work = BatchWork(decodes, prefills, swapins, swapouts, mixed=mixed)
         # placement snapshot: the backend executes from these tables (and
         # the tick's CoW copy list), never from live pool state — swapped-
         # out leases are already released, and a bid freed here may be
@@ -979,7 +1024,10 @@ class Engine:
 
     def _account(self, s: Session, tokens: int, elapsed: float,
                  total_tokens: int, end: float) -> None:
-        s.service_tokens += tokens
+        # service charging goes through the policy so the MLFQ sees the
+        # actual tokens dispatched this iteration (quantum-by-token) the
+        # moment they land, not a round-granular aggregate
+        self.policy.charge_service(s, tokens, end)
         s.service_seconds += elapsed * tokens / total_tokens
         s.last_service = end
 

@@ -54,8 +54,8 @@ from repro.kvcache.swap_stream import (SwapStream, TransferFuture,
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
 from repro.models.transformer import (KVCache, PagedKVCache, lm_decode_paged,
-                                      lm_prefill_paged, lm_step,
-                                      supports_paged)
+                                      lm_mixed_paged, lm_prefill_paged,
+                                      lm_step, supports_paged)
 
 
 def _bucket(n: int, lo: int = 32) -> int:
@@ -111,6 +111,9 @@ class JaxBackend:
             "swap_out_s": 0.0, "cow_s": 0.0, "swap_in_s": 0.0,
             "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_calls": 0, "decode_calls": 0,
+            # fused iteration-level ticks (mixed scheduler on the paged
+            # layout): one dispatch covers both prefill packs + decode lanes
+            "mixed_s": 0.0, "mixed_calls": 0,
             # analytic prefill HBM traffic: bytes the legacy gather path
             # would have touched vs bytes the in-place (block-table
             # steered) path touches; the paged layout accumulates both per
@@ -199,18 +202,30 @@ class JaxBackend:
         for s, _toks in work.swapins:
             impl.swap_in(s, work.leases.get(s.sid, ()))
         t3 = time.monotonic()
-        for s, chunk in work.prefills:
-            impl.prefill(s, chunk, work.leases.get(s.sid, ()))
-        t4 = time.monotonic()
-        if work.decodes:
-            impl.decodes(work.decodes, work.leases)
-        t5 = time.monotonic()
+        fused = (work.mixed and (work.prefills or work.decodes)
+                 and hasattr(impl, "run_mixed"))
+        if fused:
+            # iteration-level tick on the paged layout: prefill packs +
+            # decode lanes share ONE jitted dispatch (attributed to
+            # mixed_s; the phase split below keeps its legacy buckets for
+            # the round path and non-paged layouts)
+            impl.run_mixed(work)
+            t4 = t5 = time.monotonic()
+            st["mixed_s"] += t4 - t3
+            st["mixed_calls"] += 1
+        else:
+            for s, chunk in work.prefills:
+                impl.prefill(s, chunk, work.leases.get(s.sid, ()))
+            t4 = time.monotonic()
+            if work.decodes:
+                impl.decodes(work.decodes, work.leases)
+            t5 = time.monotonic()
+            st["prefill_s"] += t4 - t3
+            st["decode_s"] += t5 - t4
         st["batches"] += 1
         st["swap_out_s"] += t1 - t0
         st["cow_s"] += t2 - t1
         st["swap_in_s"] += t3 - t2
-        st["prefill_s"] += t4 - t3
-        st["decode_s"] += t5 - t4
         st["wall_s"] += t5 - t0
         st["prefill_calls"] += len(work.prefills)
         st["decode_calls"] += len(work.decodes)
@@ -339,9 +354,18 @@ class _PagedLayout(_CacheLayout):
             return PagedKVCache(cache.k.at[:, dst].set(cache.k[:, src]),
                                 cache.v.at[:, dst].set(cache.v[:, src]))
 
+        def _mixed(params, cache, p_toks, p_pos, p_tables, p_wpid, p_woff,
+                   p_kvlen, p_last, d_toks, d_pos, d_tables, d_lens,
+                   d_wpid, d_woff):
+            return lm_mixed_paged(cfg, params, cache, p_toks, p_pos,
+                                  p_tables, p_wpid, p_woff, p_kvlen, p_last,
+                                  d_toks, d_pos, d_tables, d_lens, d_wpid,
+                                  d_woff)
+
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
         self._copy_fn = jax.jit(_copy_page, donate_argnums=(0,))
+        self._mixed_fn = jax.jit(_mixed, donate_argnums=(1,))
 
     # --- binding / oracle -------------------------------------------------
     def bind_kv_pool(self, pool) -> None:
@@ -689,6 +713,98 @@ class _PagedLayout(_CacheLayout):
                 s.meta.setdefault("generated", []).append(tok)
                 s.meta["next_token"] = tok
                 s.meta.setdefault("context_ids", []).append(tok)
+
+    # --- fused mixed iteration --------------------------------------------
+    def run_mixed(self, work: BatchWork) -> None:
+        """One iteration-level tick as a SINGLE jitted dispatch: every
+        prefill chunk becomes a pack of the scanned prefill stage and every
+        decode lane advances one token, over one shared cache round-trip —
+        the per-session prefill dispatches and the sequential decode-step
+        loop of the round path collapse into one ``lm_mixed_paged`` call.
+        Pack shape (C, Np), lane count B and pack count P are all bucketed
+        to powers of two; slack packs/lanes park on the scratch page (the
+        same construction ``calibrate`` warms)."""
+        b, page = self.b, self.page
+        leases = work.leases
+        packs = []
+        for s, chunk in work.prefills:
+            ids = b._context_ids(s)
+            start = s.resident_len
+            packs.append((s, ids[start:start + chunk], start,
+                          leases.get(s.sid, ())))
+        assert all(g == 1 for _, g in work.decodes), \
+            "mixed tick: decode lanes carry exactly one token"
+        decodes = [(s, leases[s.sid]) for s, _g in work.decodes]
+
+        C = _bucket(max((len(seg) for _, seg, _, _ in packs), default=1))
+        n_need = 2
+        for _, seg, start, lease in packs:
+            n_need = max(n_need,
+                         max(len(lease), -(-(start + C) // page)) + 1)
+        Np = _bucket(n_need, lo=2)
+        P = _bucket(len(packs), lo=1) if packs else 0
+        # slack packs mirror the calibrate construction: all-scratch table,
+        # full-C scratch write, kv_len C — garbage in, garbage discarded
+        p_toks = np.zeros((P, 1, C), np.int32)
+        p_pos = np.full((P, 1, C), Np * page - 1, np.int32)
+        p_tables = np.full((P, Np), self.scratch, np.int32)
+        p_wpid = np.full((P, C), self.scratch, np.int32)
+        p_woff = np.tile(np.arange(C, dtype=np.int32) % page, (P, 1))
+        p_kvlen = np.full((P,), C, np.int32)
+        p_last = np.full((P,), C - 1, np.int32)
+        for j, (s, seg, start, lease) in enumerate(packs):
+            p_toks[j, 0, :len(seg)] = seg
+            p_pos[j, 0, :len(seg)] = np.arange(start, start + len(seg))
+            p_tables[j] = self.binding.table(lease, width=Np)
+            p_woff[j] = 0
+            for i in range(len(seg)):
+                p_wpid[j, i] = self.binding.page_of(lease[(start + i) // page])
+                p_woff[j, i] = (start + i) % page
+            p_kvlen[j] = start + len(seg)
+            p_last[j] = len(seg) - 1
+
+        B = _bucket(len(decodes), lo=1) if decodes else 0
+        maxp = _bucket(max((len(l) for _, l in decodes), default=1), lo=1)
+        d_toks = np.zeros((B,), np.int32)
+        d_pos = np.zeros((B,), np.int32)
+        d_tables = np.full((B, maxp), self.scratch, np.int32)
+        d_lens = np.ones((B,), np.int32)
+        d_wpid = np.full((B,), self.scratch, np.int32)
+        d_woff = np.zeros((B,), np.int32)
+        for i, (s, lease) in enumerate(decodes):
+            p = s.resident_len
+            d_tables[i, :len(lease)] = [self.binding.page_of(x)
+                                        for x in lease]
+            d_toks[i] = s.meta.get("next_token", 1)
+            d_pos[i] = p
+            d_lens[i] = p + 1
+            d_wpid[i] = self.binding.page_of(lease[p // page])
+            d_woff[i] = p % page
+
+        p_next, d_next, self.cache = self._mixed_fn(
+            b.params, self.cache, jnp.asarray(p_toks), jnp.asarray(p_pos),
+            jnp.asarray(p_tables), jnp.asarray(p_wpid), jnp.asarray(p_woff),
+            jnp.asarray(p_kvlen), jnp.asarray(p_last), jnp.asarray(d_toks),
+            jnp.asarray(d_pos), jnp.asarray(d_tables), jnp.asarray(d_lens),
+            jnp.asarray(d_wpid), jnp.asarray(d_woff))
+        if packs:
+            p_next = np.asarray(p_next)
+            for j, (s, _seg, _start, _lease) in enumerate(packs):
+                s.meta["next_token"] = int(p_next[j])
+        if decodes:
+            d_next = np.asarray(d_next)
+            for i, (s, _lease) in enumerate(decodes):
+                tok = int(d_next[i])
+                s.meta.setdefault("generated", []).append(tok)
+                s.meta["next_token"] = tok
+                s.meta.setdefault("context_ids", []).append(tok)
+        # per-chunk analytic HBM accounting, same model as prefill()
+        tok_bytes = self.kv_bytes_per_token()
+        st = b.dispatch_stats
+        for _ in packs:
+            st["prefill_gather_bytes"] += \
+                (3 * Np * page + 3 * C) * tok_bytes
+            st["prefill_inplace_bytes"] += (Np * page + C) * tok_bytes
 
 
 class _DenseLayout(_CacheLayout):

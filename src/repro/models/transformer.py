@@ -431,6 +431,66 @@ def lm_prefill_paged(cfg: ModelConfig, params, cache: PagedKVCache, tokens,
     return logits, PagedKVCache(ks, vs)
 
 
+def lm_mixed_paged(cfg: ModelConfig, params, cache: PagedKVCache,
+                   p_tokens, p_positions, p_tables, p_write_pages,
+                   p_write_offsets, p_kv_lens, p_last_idx,
+                   d_tokens, d_positions, d_tables, d_lengths,
+                   d_write_pages, d_write_offsets, *,
+                   pctx: Optional[ParallelCtx] = None):
+    """ONE mixed continuous-batching iteration against the page pool:
+    ``P`` chunked-prefill packs (scanned, cache as carry) followed by ``B``
+    one-token decode lanes, fused into a single traced computation so the
+    engine's mixed tick costs one dispatch.
+
+    Prefill pack arrays carry a leading ``P`` axis over the per-pack
+    ``lm_prefill_paged`` arguments: p_tokens (P, 1, C), p_positions
+    (P, 1, C), p_tables (P, Np), p_write_pages/p_write_offsets (P, C),
+    p_kv_lens (P,), p_last_idx (P,) — the index of each pack's last real
+    chunk token, whose greedy argmax seeds the session's decoding. Decode
+    arrays are ``lm_decode_paged``'s, batch-first: d_tokens/d_positions/
+    d_lengths/d_write_pages/d_write_offsets (B,), d_tables (B, max_pages).
+    ``P == 0`` / ``B == 0`` skip their stage *statically* (shape-driven:
+    a different bucket recompiles, which the power-of-two bucketing
+    bounds).
+
+    Ordering within the fused iteration is safe by the pool's write-
+    exclusivity: a pack scatters KV only into its session's exclusively
+    owned pages (freshly leased or CoW'd), so prefill writes can never
+    alias a decode lane's readable prefix — the scan-then-decode order is
+    an implementation choice, not a correctness requirement.
+
+    Returns (p_next (P,) int32, d_next (B,) int32, cache).
+    """
+    assert supports_paged(cfg), "mixed paged: unsupported attention variant"
+    P = p_tokens.shape[0]
+    B = d_tokens.shape[0]
+
+    def pack_body(carry, inp):
+        toks, pos, table, wpid, woff, kv_len, last = inp
+        logits, carry = lm_prefill_paged(cfg, params, carry, toks, pos,
+                                         table, wpid, woff, kv_len,
+                                         pctx=pctx)
+        nxt = jnp.argmax(logits[0, last], axis=-1).astype(jnp.int32)
+        return carry, nxt
+
+    if P > 0:
+        cache, p_next = lax.scan(
+            pack_body, cache,
+            (p_tokens, p_positions, p_tables, p_write_pages,
+             p_write_offsets, p_kv_lens, p_last_idx))
+    else:
+        p_next = jnp.zeros((0,), jnp.int32)
+    if B > 0:
+        logits, cache = lm_decode_paged(cfg, params, cache, d_tokens,
+                                        d_positions, d_tables, d_lengths,
+                                        d_write_pages, d_write_offsets,
+                                        pctx=pctx)
+        d_next = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        d_next = jnp.zeros((0,), jnp.int32)
+    return p_next, d_next, cache
+
+
 def lm_prefill_paged_gather(cfg: ModelConfig, params, cache: PagedKVCache,
                             tokens, positions, table, write_pages,
                             write_offsets, *,

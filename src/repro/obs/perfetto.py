@@ -91,7 +91,12 @@ def export_perfetto(tracers: Union[Tracer, Dict[str, Tracer]],
                              "phases": d.get("phases", {}),
                              "decodes": d.get("n_decodes", 0),
                              "prefills": d.get("n_prefills", 0),
-                             "swapins": d.get("n_swapins", 0)}})
+                             "swapins": d.get("n_swapins", 0),
+                             # iteration composition (mixed scheduler):
+                             # token split of this dispatch
+                             "mixed": d.get("mixed", False),
+                             "decode_tokens": d.get("decode_tokens", 0),
+                             "prefill_tokens": d.get("prefill_tokens", 0)}})
             for field, label in _COUNTER_FIELDS:
                 if field in d:
                     events.append({"ph": "C", "pid": pid, "name": label,

@@ -28,7 +28,12 @@ Span kinds map onto the paper's §4.1 event taxonomy (Table 1):
 
 The tracer is an ordinary subscriber: attach it before submitting sessions
 (``Tracer.install(engine)`` also flips ``engine.trace_ticks`` so the engine
-emits per-tick phase timings and retention audit records).
+emits per-tick phase timings and retention audit records). Each ``TICK``
+event additionally carries the iteration's batch composition — ``mixed``
+(scheduler mode), ``decode_tokens``, ``prefill_tokens`` — which the
+Perfetto exporter surfaces as tick-slice args; under the default mixed
+scheduler one tick is one model iteration (every decode lane exactly one
+token), so tick density is much higher than under ``scheduler="round"``.
 """
 from __future__ import annotations
 
