@@ -1,0 +1,136 @@
+"""CPU-contention benchmark: goodput collapse under a tool-heavy mix and
+its recovery with CPU-aware admission.
+
+The workload is the profile where host cores, not the GPU, are the scarce
+resource: sessions whose rounds draw from ``TOOL_HEAVY_MIX`` (test suites
+and dense shell activity) while the engine's shared :class:`CpuPool` has
+only a handful of cores. Every tool execution, swap staging copy and spool
+I/O leases from that one pool, so a tool burst queues transfers behind it
+and vice versa.
+
+Two MARS configurations over the identical workload and pool. Both arms
+run with the *reactive* AIMD CPU flag neutralized (``cpu_overload_factor``
+pushed out of reach), so the only CPU feedback in play is the new
+predictive pool term — a clean A/B of the admission change itself:
+
+* **naive** — ``cpu_queue_bound_s = inf`` (the default): admission sizes
+  the window on GPU/KV pressure only. Admitted sessions pile tool work
+  onto the saturated pool, interference stretches every service time,
+  core-queue waits stack onto every round, and sessions blow their SLOs
+  together — the goodput collapse.
+
+* **cpu_aware** — a finite ``cpu_queue_bound_s``: admission projects the
+  standing tool-CPU commitments of admitted sessions (plus the pool's
+  scheduled work-in-system) onto the cores and defers admits that would
+  push the projected queueing delay past the bound (tool-light sessions
+  behind them still pass).
+
+The derived row reports the goodput recovery plus the structural evidence
+(core queue-wait seconds actually accumulated under naive; admits
+actually deferred under aware) that the recovery comes from the CPU term
+and not noise.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.qwen3_coder_30b import CONFIG as QWEN3
+from repro.core.admission import ControlPlaneConfig
+from repro.core.cpu_pool import CpuPoolConfig
+from repro.core.goodput import summarize
+from repro.core.policies import MARSConfig
+from repro.core.telemetry import TelemetryConfig
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig, run_sim
+from repro.models.perf_model import H100
+from repro.workloads.generator import TOOL_HEAVY_MIX, WorkloadSpec, generate
+
+# few cores under many concurrent test/build tools: the contended regime
+CPU_CORES = 4
+# co-running work on a saturated pool stretches up to ~1.6x: build/test
+# processes thrash shared caches and memory bandwidth, not just timeslices
+INTERFERENCE = 0.8
+# CPU-aware bound: defer an admit once the projected core-queue delay
+# (standing commitments + scheduled work over cores) crosses this
+CPU_BOUND_S = 40.0
+
+
+def _workload(n_sessions: int, rate: float, seed: int = 29) -> WorkloadSpec:
+    return WorkloadSpec(regime="S-ILR1", arrival_rate=rate,
+                        n_sessions=n_sessions, seed=seed,
+                        max_context=131_072,
+                        tool_mix=TOOL_HEAVY_MIX,
+                        tool_time_scale=0.5)
+
+
+def _run(spec: WorkloadSpec, *, bound_s: float, name: str) -> Dict:
+    # a slow-opening admission window (small w_init, unit additive step)
+    # keeps a standing arrival queue, so most admits happen while the pool
+    # is already hot — the regime where the CPU term can actually act
+    mars = MARSConfig(control=ControlPlaneConfig(
+        w_init=2.0, cpu_queue_bound_s=bound_s))
+    eng = Engine(EngineConfig(total_kv_blocks=12_000, block_size=32,
+                              token_budget=8192, max_decode_batch=64,
+                              decode_granularity=8, cpu_slots=CPU_CORES,
+                              telem=TelemetryConfig(
+                                  cpu_slots=CPU_CORES,
+                                  cpu_overload_factor=1e9),
+                              cpu_pool=CpuPoolConfig(
+                                  cores=CPU_CORES,
+                                  interference=INTERFERENCE)),
+                 "mars", SimBackend(QWEN3, H100), mars_cfg=mars)
+    sessions = generate(spec, QWEN3, H100)
+    finished, horizon = run_sim(eng, sessions, max_time=4e5)
+    eng.check_invariants()
+    stats = summarize(finished, horizon)
+    pool = eng.cpu_pool.stats()
+    return {
+        "figure": "cpu_contention",
+        "name": name,
+        "n_finished": len(finished),
+        "goodput3_req_s": round(stats["goodput"][3.0], 5),
+        "mean_s": round(stats["latency"].mean, 1),
+        "p90_s": round(stats["latency"].p90, 1),
+        "cpu_cores": pool["cores"],
+        "cpu_queue_wait_s": round(pool["queue_wait_total_s"], 1),
+        "cpu_busy_s": round(sum(pool["busy_s"].values()), 1),
+        "cpu_max_backlog": pool["max_backlog"],
+        "cpu_deferred": eng.policy.control.cpu_deferred,
+    }
+
+
+def run(quick: bool = True, dry: bool = False) -> List[Dict]:
+    """``dry`` (CI smoke): a minimal tool-heavy workload through both
+    admission modes — exercises pool queueing, interference stretching and
+    the admission CPU term without timing-grade sizes."""
+    n = 16 if dry else (24 if quick else 48)
+    rate = 1.0
+    spec = _workload(n, rate=rate)
+    rows: List[Dict] = []
+    for name, bound in (("naive", float("inf")), ("cpu_aware", CPU_BOUND_S)):
+        rows.append(_run(spec, bound_s=bound, name=name))
+    naive, aware = rows[0], rows[1]
+    rows.append({
+        "figure": "cpu_contention",
+        "name": "cpu_aware_recovery",
+        "naive_goodput": naive["goodput3_req_s"],
+        "aware_goodput": aware["goodput3_req_s"],
+        # collapse can drive the naive arm to exactly zero goodput, so the
+        # ratio floors its denominator at 1e-4 req/s (~one SLO-met session
+        # per 2.8 h) instead of exploding
+        "goodput_ratio": round(aware["goodput3_req_s"] /
+                               max(1e-4, naive["goodput3_req_s"]), 3),
+        "queue_wait_ratio": round(naive["cpu_queue_wait_s"] /
+                                  max(1e-9, aware["cpu_queue_wait_s"]), 3),
+        # structural evidence: the pool really queued under the naive run,
+        # and the aware run really exercised the deferral path
+        "naive_queue_wait_s": naive["cpu_queue_wait_s"],
+        "deferred": aware["cpu_deferred"],
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from common import bench_main
+    bench_main(run, dry_help="CI smoke: minimal tool-heavy workload, "
+                             "naive vs CPU-aware admission")

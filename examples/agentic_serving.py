@@ -13,6 +13,10 @@ exit.
 ``--trace OUT.json`` attaches the critical-path tracer (repro.obs) and
 writes a Perfetto trace at exit (open at ui.perfetto.dev), plus prints the
 per-session latency-breakdown table.
+
+``--cpu-cores N`` sizes the shared host-CPU pool (default 2) that the
+real tool threads and the swap/spool staging paths all lease from; the
+pool's occupancy / queue-wait breakdown prints at exit.
 """
 import argparse
 import os
@@ -74,6 +78,16 @@ def _print_tier_breakdown(engine):
           f"direct_to_disk={stats['direct_to_disk']}")
 
 
+def _print_cpu_pool(engine):
+    stats = engine.cpu_pool.stats()
+    leases = ", ".join(f"{k}={n}" for k, n in
+                       sorted(stats["n_leases"].items())) or "none"
+    busy = sum(stats["busy_s"].values())
+    print(f"  {stats['cores']} cores, leases: {leases}")
+    print(f"  busy={busy:.2f}s queue_wait={stats['queue_wait_total_s']:.2f}s "
+          f"max_backlog={stats['max_backlog']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--disk-tier", action="store_true",
@@ -82,16 +96,20 @@ def main():
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write a Perfetto trace and print the per-session "
                          "critical-path breakdown at exit")
+    ap.add_argument("--cpu-cores", type=int, default=2, metavar="N",
+                    help="shared host-CPU pool size: tool threads and "
+                         "swap/spool staging all lease from it (default 2)")
     args = ap.parse_args()
 
     cfg = get_config("qwen2.5-3b").reduced()
     spool = tempfile.mkdtemp(prefix="mars_spool_") if args.disk_tier else None
     backend = JaxBackend(cfg, max_slots=4, max_len=512, disk_spool=spool)
     bus = EventBus()
-    tools = RealToolExecutor(cpu_slots=2, bus=bus)
+    tools = RealToolExecutor(cpu_slots=args.cpu_cores, bus=bus)
     engine = Engine(
         EngineConfig(total_kv_blocks=4 * 511 // 32, token_budget=256,
-                     max_decode_batch=4, decode_granularity=4, cpu_slots=2,
+                     max_decode_batch=4, decode_granularity=4,
+                     cpu_slots=args.cpu_cores,
                      disk_tier_blocks=(1024 if args.disk_tier else 0)),
         "mars", backend, bus=bus, tool_exec=tools)
     tracer = None
@@ -141,6 +159,8 @@ def main():
                   f"tracker={ws.tracker}")
         print("KV tier breakdown:")
         _print_tier_breakdown(engine)
+        print("CPU pool:")
+        _print_cpu_pool(engine)
         if tracer is not None:
             from repro.obs import breakdown_table, export_perfetto
             export_perfetto(tracer, args.trace)

@@ -50,6 +50,7 @@ python benchmarks/swap_stream_bench.py --dry --json "$BENCH_JSON_DIR/swap_stream
 python benchmarks/cross_replica_bench.py --dry --json "$BENCH_JSON_DIR/cross_replica.json"
 python benchmarks/tiered_store_bench.py --dry --json "$BENCH_JSON_DIR/tiered_store.json"
 python benchmarks/continuous_batching_bench.py --dry --json "$BENCH_JSON_DIR/continuous_batching.json"
+python benchmarks/cpu_contention_bench.py --dry --json "$BENCH_JSON_DIR/cpu_contention.json"
 # obs bench also writes a Perfetto trace; trace_report validates the
 # exporter's schema (nonzero exit on violations) and prints the breakdown
 python benchmarks/obs_overhead_bench.py --dry --json "$BENCH_JSON_DIR/obs.json" \
@@ -57,11 +58,12 @@ python benchmarks/obs_overhead_bench.py --dry --json "$BENCH_JSON_DIR/obs.json" 
 python scripts/trace_report.py "$BENCH_JSON_DIR/obs_trace.json" --max-rows 5
 # docs hygiene: every relative link in README.md and docs/ must resolve
 python scripts/check_docs_links.py
-# the eight fresh files are named explicitly — a glob would also pick up
+# the nine fresh files are named explicitly — a glob would also pick up
 # stale/quick-config rows persisting in an externally-supplied dir (e.g.
 # nightly's *-quick.json), and same-(figure,name) rows would shadow these
 python scripts/check_bench.py --baselines benchmarks/baselines.json \
     "$BENCH_JSON_DIR"/kernel.json "$BENCH_JSON_DIR"/kvcache.json \
     "$BENCH_JSON_DIR"/paged_runner.json "$BENCH_JSON_DIR"/swap_stream.json \
     "$BENCH_JSON_DIR"/cross_replica.json "$BENCH_JSON_DIR"/tiered_store.json \
-    "$BENCH_JSON_DIR"/obs.json "$BENCH_JSON_DIR"/continuous_batching.json
+    "$BENCH_JSON_DIR"/obs.json "$BENCH_JSON_DIR"/continuous_batching.json \
+    "$BENCH_JSON_DIR"/cpu_contention.json

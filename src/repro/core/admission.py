@@ -11,7 +11,7 @@ hysteresis (in Telemetry), clamped by CPU- and KV-derived limits.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 from repro.core import events as ev
 from repro.core.events import EventBus
@@ -29,6 +29,11 @@ class ControlPlaneConfig:
     control_interval: float = 2.0      # seconds between AIMD updates
     long_session_blocks: int = 1024    # "long" threshold for first-fit mode
     block_size: int = 32
+    # CPU-oversubscription admission term: defer an admit whose tool
+    # profile (per-kind EMA CPU seconds) would push the shared core pool's
+    # projected queueing delay past this bound — the CPU analogue of the
+    # KV-blocks sizing above. inf disables the term (CPU-naive admission).
+    cpu_queue_bound_s: float = float("inf")
 
 
 class ExternalControlPlane:
@@ -43,6 +48,22 @@ class ExternalControlPlane:
         # bound in-process by the engine; a remote control plane can bind
         # ``kvcache.radix.estimate_digest_match`` over the heartbeat digest)
         self.prefix_lookup = None
+        # shared host-CPU core pool (bound via Services when the engine has
+        # one): its work-in-system horizon is the pressure signal the
+        # cpu_queue_bound_s term prices. None => term inactive.
+        self.cpu_pool = None
+        self.cpu_deferred = 0          # admits deferred on projected CPU wait
+        # standing per-round tool-CPU commitments of admitted, unfinished
+        # sessions. The pool's instantaneous schedule lags admission by a
+        # whole prefill phase (a session puts nothing on cores until its
+        # first tool), so the projection must count admitted demand that
+        # has not reached the pool yet or every arrival wave sails in
+        # before the cores heat up.
+        self._cpu_commit: Dict[int, float] = {}
+        bus.subscribe(ev.FINISH, self._on_finish)
+
+    def _on_finish(self, e) -> None:
+        self._cpu_commit.pop(e.sid, None)
 
     # --- helpers -------------------------------------------------------------
     def estimate_blocks(self, s: Session) -> int:
@@ -58,6 +79,15 @@ class ExternalControlPlane:
         if self.prefix_lookup is not None:
             est -= max(0, int(self.prefix_lookup(s)))
         return max(1, est)
+
+    def estimate_tool_cpu(self, s: Session) -> float:
+        """Per-session tool CPU profile: mean EMA-estimated seconds over
+        the session's tool-bearing rounds — what one admitted session is
+        expected to put on the shared core pool per tool yield. 0.0 for
+        tool-free sessions (they never contend for cores)."""
+        ests = [self.telem.tool_estimate(r.tool_kind)
+                for r in s.rounds if r.tool_kind is not None]
+        return (sum(ests) / len(ests)) if ests else 0.0
 
     # --- Alg.1 PackQueue ------------------------------------------------------
     def pack_queue(self, queue: List[Session]) -> List[Session]:
@@ -112,7 +142,37 @@ class ExternalControlPlane:
         slots = limit - self.telem.active_sessions
         if slots <= 0:
             return []
-        admitted = ordered[:slots]
+        # CPU-oversubscription term: walk the packed order keeping a
+        # running backlog of the tool CPU this cycle's admits would add;
+        # defer (skip, not reject) any session whose profile would push
+        # the pool's projected core-queueing delay past the bound —
+        # tool-light sessions behind it still pass.
+        bound = self.cfg.cpu_queue_bound_s
+        price_cpu = bound != float("inf") and self.cpu_pool is not None
+        admitted: List[Session] = []
+        # hypothetical backlog this cycle's admits stack on top of the
+        # standing commitments of every admitted-but-unfinished session
+        extra_cpu_s = sum(self._cpu_commit.values()) if price_cpu else 0.0
+        for s in ordered:
+            if len(admitted) >= slots:
+                break
+            if price_cpu:
+                est = self.estimate_tool_cpu(s)
+                if est > 0.0:
+                    # the candidate waits behind scheduled + committed
+                    # work and this cycle's earlier admits — never behind
+                    # itself (else a session with est > bound*cores
+                    # starves on an idle pool); its own est joins the
+                    # backlog only once it passes, pricing the admits
+                    # after it
+                    wait = max(self.cpu_pool.horizon_wait(now),
+                               extra_cpu_s / self.cpu_pool.cores)
+                    if wait > bound:
+                        self.cpu_deferred += 1
+                        continue
+                    extra_cpu_s += est
+                    self._cpu_commit[s.sid] = est
+            admitted.append(s)
         for s in admitted:
             self.bus.emit(ev.ADMIT, now, s.sid,
                           est_blocks=self.estimate_blocks(s))

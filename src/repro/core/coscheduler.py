@@ -91,6 +91,12 @@ class OpportunisticCoScheduler:
         # exists (None => three-way retention, no OFFLOAD_DISK outcome)
         self.disk_read_seconds: Optional[Callable[[int], float]] = None
         self.disk_write_seconds: Optional[Callable[[int], float]] = None
+        # CPU-side transfer delay, bound when a shared core pool exists:
+        # ``cpu_wait(transfer_s, now)`` -> projected seconds the restore's
+        # staging copy would queue for a host core right now. Warm
+        # resumption is only chosen when the CPU side can deliver it — the
+        # projected wait is subtracted from the offload/disk nets.
+        self.cpu_wait: Optional[Callable[[float, float], float]] = None
         # the three nets behind the most recent retention_decision — the
         # observability audit reads this stash instead of re-running the
         # (swap-sizing, hence expensive) pricing a second time
@@ -178,7 +184,11 @@ class OpportunisticCoScheduler:
         # async stream: the H2D prefetch overlaps other sessions' compute,
         # so no GPU time is lost to the restore itself.
         serialized = 0.0 if self.swap_in_overlapped else t_swap
-        benefit = self.recompute_time(s.resident_len) - serialized
+        # CPU contention: the restore's staging copy queues for a shared
+        # host core — under a tool burst that wait delays the warm resume
+        # whether or not the DMA itself is overlapped
+        cpu_delay = self.cpu_wait(t_swap, now) if self.cpu_wait else 0.0
+        benefit = self.recompute_time(s.resident_len) - serialized - cpu_delay
         return benefit - self.cfg.offload_price * t_swap
 
     def disk_net(self, s: Session, now: float) -> float:
@@ -199,7 +209,12 @@ class OpportunisticCoScheduler:
         t_up = self.swap_seconds(moved)          # hop 2: DRAM -> HBM
         t_read = self.disk_read_seconds(moved)   # hop 1: NVMe -> DRAM
         serialized = 0.0 if self.swap_in_overlapped else t_up
-        benefit = self.recompute_time(s.resident_len) - serialized - t_read
+        # CPU contention: both staged hops (spool fill pump + H2D staging)
+        # queue for shared host cores before the session can resume warm
+        cpu_delay = (self.cpu_wait(t_read + t_up, now)
+                     if self.cpu_wait else 0.0)
+        benefit = (self.recompute_time(s.resident_len) - serialized - t_read
+                   - cpu_delay)
         t_write = self.disk_write_seconds(moved) + t_up
         return benefit - self.cfg.disk_price * t_write
 

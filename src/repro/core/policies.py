@@ -15,8 +15,9 @@ paper's fairness requirement).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import List, Optional, Protocol, Sequence, Tuple
+from typing import Callable, List, Optional, Protocol, Sequence, Tuple
 
 from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
 from repro.core.coscheduler import CoSchedulerConfig, OpportunisticCoScheduler
@@ -30,6 +31,33 @@ class PerfOracle(Protocol):
     def recompute_time(self, n_tokens: int) -> float: ...
     def swap_time(self, n_tokens: int) -> float: ...
     def prefill_rate(self) -> float: ...   # sustainable prefill tokens/s
+
+
+@dataclass
+class Services:
+    """Engine-owned services handed to the policy once, after construction
+    (the policy-binding API — replaces the ``bind_services`` kwarg sprawl).
+
+    * ``host_tier`` — the engine's ``TieredStore`` (host DRAM + NVMe
+      orchestration; wears the same capacity/cost surface as a bare tier).
+    * ``swap_size_fn`` — session -> (tokens, blocks) that would *actually*
+      cross PCIe on offload (radix-shared blocks stay on device).
+    * ``async_swap`` — the backend runs a background swap stream, so
+      swap-in prefetches overlap other sessions' compute.
+    * ``prefix_lookup`` — session -> blocks of its chunk-key prefix already
+      indexed here (radix-aware admission sizing).
+    * ``disk_tier`` — NVMe cold tier (None => three-way retention).
+    * ``cpu_pool`` — the shared host-CPU core pool tools/swap/spool lease
+      from: admission prices projected core-queueing delay, retention
+      prices the CPU-side transfer delay into PIN/OFFLOAD/OFFLOAD_DISK.
+
+    Baselines ignore what they don't price."""
+    host_tier: Optional[object] = None
+    swap_size_fn: Optional[Callable[[Session], Tuple[int, int]]] = None
+    async_swap: bool = False
+    prefix_lookup: Optional[Callable[[Session], int]] = None
+    disk_tier: Optional[object] = None
+    cpu_pool: Optional[object] = None
 
 
 class Policy:
@@ -48,25 +76,32 @@ class Policy:
         self.swap_size_fn = None       # session -> (tokens, blocks) moved
         self.async_swap = False        # backend runs a background swap stream
         self.prefix_lookup = None      # session -> indexed prefix blocks
+        self.cpu_pool = None           # shared host-CPU core pool
+
+    def bind(self, services: Services) -> None:
+        """Bind the engine-owned ``Services`` bundle (see its docstring).
+        Subclasses extend this — not ``bind_services``, which is only a
+        deprecation shim around it."""
+        self.host_tier = services.host_tier
+        self.disk_tier = services.disk_tier
+        self.swap_size_fn = services.swap_size_fn
+        self.async_swap = services.async_swap
+        self.prefix_lookup = services.prefix_lookup
+        self.cpu_pool = services.cpu_pool
 
     def bind_services(self, host_tier=None, swap_size_fn=None,
                       async_swap=False, prefix_lookup=None,
-                      disk_tier=None) -> None:
-        """Engine-owned KV services handed to the policy after
-        construction: the host-DRAM tier (the engine passes its
-        ``TieredStore``, which wears the same capacity/cost surface), the
-        per-block offload sizing (what would *actually* cross PCIe —
-        radix-shared blocks stay on device), whether the backend runs an
-        async swap stream (swap-in prefetch overlaps other sessions'
-        compute, so restores stop serializing GPU ticks), the radix prefix
-        lookup (session -> blocks of its chunk-key prefix already indexed
-        here, for radix-aware admission sizing), and the NVMe cold tier
-        (None => three-way retention). Baselines ignore them."""
-        self.host_tier = host_tier
-        self.disk_tier = disk_tier
-        self.swap_size_fn = swap_size_fn
-        self.async_swap = async_swap
-        self.prefix_lookup = prefix_lookup
+                      disk_tier=None, cpu_pool=None) -> None:
+        """Deprecated kwarg form of :meth:`bind` — kept one release for
+        out-of-tree callers; routes through ``bind(Services(...))`` so
+        subclass extensions of ``bind`` still run."""
+        warnings.warn(
+            "Policy.bind_services(**kwargs) is deprecated; pass a single "
+            "Services dataclass to Policy.bind() instead",
+            DeprecationWarning, stacklevel=2)
+        self.bind(Services(host_tier=host_tier, swap_size_fn=swap_size_fn,
+                           async_swap=async_swap, prefix_lookup=prefix_lookup,
+                           disk_tier=disk_tier, cpu_pool=cpu_pool))
 
     # --- admission (external) ----------------------------------------------
     def admit(self, queue: List[Session], now: float) -> List[Session]:
@@ -223,14 +258,17 @@ class MARSPolicy(Policy):
         if self.cfg.disable_coscheduler:
             self.name = "mars-no-cosched"
 
-    def bind_services(self, host_tier=None, swap_size_fn=None,
-                      async_swap=False, prefix_lookup=None,
-                      disk_tier=None) -> None:
-        super().bind_services(host_tier, swap_size_fn, async_swap,
-                              prefix_lookup, disk_tier)
+    def bind(self, services: Services) -> None:
+        super().bind(services)
+        host_tier, disk_tier = services.host_tier, services.disk_tier
+        swap_size_fn = services.swap_size_fn
         # radix-aware admission (Alg. 1 ext.): queue packing estimates
         # footprint net of the already-indexed shared prefix
-        self.control.prefix_lookup = prefix_lookup
+        self.control.prefix_lookup = services.prefix_lookup
+        # CPU-oversubscription admission term: the control plane defers
+        # admits whose tool profile would push core-queueing delay past
+        # its bound, the way it already prices HBM blocks
+        self.control.cpu_pool = services.cpu_pool
         self.cosched.swap_seconds = \
             host_tier.swap_seconds if host_tier is not None else None
         # price the PCIe leg by what per-block offload actually moves
@@ -238,12 +276,24 @@ class MARSPolicy(Policy):
             (lambda s: swap_size_fn(s)[0]) if swap_size_fn else None
         # async stream: prefetched swap-ins overlap other sessions'
         # compute, so the restore no longer serializes a GPU tick
-        self.cosched.swap_in_overlapped = bool(async_swap)
+        self.cosched.swap_in_overlapped = bool(services.async_swap)
         # NVMe cold tier: staged-restore pricing for the fourth outcome
         self.cosched.disk_read_seconds = \
             disk_tier.read_seconds if disk_tier is not None else None
         self.cosched.disk_write_seconds = \
             disk_tier.write_seconds if disk_tier is not None else None
+        # CPU-side transfer delay: staging copies lease from the shared
+        # core pool, so a warm resume is only worth choosing when the CPU
+        # side can deliver it — retention subtracts the projected core
+        # wait from the offload/disk nets
+        pool = services.cpu_pool
+        if pool is not None and pool.cfg.transfer_cpu_frac > 0.0:
+            frac = pool.cfg.transfer_cpu_frac
+            self.cosched.cpu_wait = (
+                lambda cost_s, now: pool.queue_wait_estimate(
+                    now, frac * cost_s))
+        else:
+            self.cosched.cpu_wait = None
 
     def _sized_blocks(self, s: Session) -> int:
         if self.swap_size_fn is not None:

@@ -48,12 +48,14 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Set, Tuple
 
 from repro.core import events as ev
+from repro.core.cpu_pool import CpuPool, CpuPoolConfig
 from repro.core.events import EventBus
-from repro.core.policies import KVAction, MARSConfig, Policy, make_policy
+from repro.core.policies import (KVAction, MARSConfig, Policy, Services,
+                                 make_policy)
 from repro.core.session import KVState, Phase, Round, Session
 from repro.core.telemetry import Telemetry, TelemetryConfig
 from repro.engine.backend import BatchWork
-from repro.engine.tools import SimToolExecutor
+from repro.engine.tools import SimToolExecutor, ToolExecutor
 from repro.kvcache import (BlockPool, DiskTier, DiskTierConfig, HostTier,
                            HostTierConfig, RadixIndex, TieredStore)
 
@@ -71,6 +73,10 @@ class EngineConfig:
     # "round" = legacy round-granular scheduling (parity baseline).
     scheduler: str = "mixed"
     cpu_slots: int = 16
+    # shared host-CPU pool (core/cpu_pool): queueing + interference model
+    # every CPU consumer (tools, swap staging, spool I/O) leases from.
+    # None => derived from cpu_slots with the documented defaults.
+    cpu_pool: CpuPoolConfig = None
     telem: TelemetryConfig = None     # derived from cpu_slots if None
     enable_prefix_sharing: bool = True  # radix index over prefix chunk hashes
     host_tier_blocks: int = -1        # host-DRAM tier capacity; -1 => 4x HBM
@@ -88,6 +94,8 @@ class EngineConfig:
     def __post_init__(self):
         if self.telem is None:
             self.telem = TelemetryConfig(cpu_slots=self.cpu_slots)
+        if self.cpu_pool is None:
+            self.cpu_pool = CpuPoolConfig(cores=self.cpu_slots)
         if self.scheduler not in ("mixed", "round"):
             raise ValueError(
                 f"scheduler must be 'mixed' or 'round', got "
@@ -116,6 +124,19 @@ class Engine:
             if (cfg.enable_prefix_sharing
                 and getattr(backend, "supports_prefix_sharing", False))
             else None)
+        # shared CPU core pool: tools, swap staging, and spool I/O all
+        # lease from it. An externally built executor brings its own pool
+        # (the engine adopts it so the transfer paths contend with its
+        # tools); otherwise one is built from the config.
+        if tool_exec is not None and getattr(tool_exec, "pool", None) \
+                is not None:
+            self.cpu_pool: CpuPool = tool_exec.pool
+        else:
+            self.cpu_pool = CpuPool(cfg.cpu_pool)
+        # live backends track swap-stream worker CPU against the same pool
+        bind_cpu = getattr(backend, "bind_cpu_pool", None)
+        if bind_cpu is not None:
+            bind_cpu(self.cpu_pool)
         host_blocks = (4 * cfg.total_kv_blocks if cfg.host_tier_blocks < 0
                        else cfg.host_tier_blocks)
         bpt_fn = getattr(backend, "kv_bytes_per_token", None)
@@ -144,7 +165,7 @@ class Engine:
                         recompute_time=backend.recompute_time,
                         demote_after_s=cfg.disk_demote_after_s,
                         demote_watermark=cfg.disk_demote_watermark,
-                        bus=self.bus)
+                        bus=self.bus, cpu_pool=self.cpu_pool)
             if self.host is not None else None)
         if self.tiers is not None and self.disk is not None:
             spill = getattr(backend, "spill_host", None)
@@ -161,14 +182,17 @@ class Engine:
                                         False))
         self.policy: Policy = make_policy(policy_name, self.telem, self.bus,
                                           backend, mars_cfg)
-        self.policy.bind_services(host_tier=self.tiers,
-                                  swap_size_fn=self._private_swap_size,
-                                  async_swap=self._async_swap,
-                                  prefix_lookup=(self._indexed_prefix_blocks
-                                                 if self.radix is not None
-                                                 else None),
-                                  disk_tier=self.disk)
-        self.tools = tool_exec or SimToolExecutor(cfg.cpu_slots, self.bus)
+        self.policy.bind(Services(
+            host_tier=self.tiers,
+            swap_size_fn=self._private_swap_size,
+            async_swap=self._async_swap,
+            prefix_lookup=(self._indexed_prefix_blocks
+                           if self.radix is not None else None),
+            disk_tier=self.disk,
+            cpu_pool=self.cpu_pool))
+        self.tools: ToolExecutor = (tool_exec
+                                    or SimToolExecutor(self.cpu_pool,
+                                                       self.bus))
         self.waiting: List[Session] = []
         self.active: List[Session] = []
         self.pinned: List[Session] = []
@@ -373,6 +397,8 @@ class Engine:
                 active=len(self.active), waiting=len(self.waiting),
                 free_blocks=self.blocks.free,
                 active_tools=self.telem.active_tools,
+                cpu_busy=self.cpu_pool.busy_cores(now),
+                cpu_backlog=self.cpu_pool.backlog(now),
                 host_used=self.host.used_blocks if self.host else 0,
                 disk_used=self.disk.used_blocks if self.disk else 0,
                 **extra)
@@ -607,7 +633,8 @@ class Engine:
         if s.meta.pop("host_tier", None) and self.tiers is not None:
             self.tiers.drop(s.sid)
         for k in ("swap_pages", "restore_positions", "host_blocks",
-                  "host_tokens", "kv_tier", "swap_in_future", "swap_cost_s"):
+                  "host_tokens", "kv_tier", "swap_in_future", "swap_cost_s",
+                  "swap_cpu_wait_s"):
             s.meta.pop(k, None)
         drop = getattr(self.backend, "drop_host", None)
         if drop is not None:
@@ -634,9 +661,9 @@ class Engine:
         ``check_invariants`` holds after detach, so a recovered replica can
         keep ticking without resuming a session it no longer owns."""
         if s.phase == Phase.TOOL:
-            cancel = getattr(self.tools, "cancel", None)
-            if cancel is not None:
-                cancel(s.sid, now)
+            # protocol-guaranteed: both executors release the session's
+            # pool lease (queued or running) on cancel
+            self.tools.cancel(s.sid, now)
         self._release_kv(s, now, reason="detach")
         for lst in (self.waiting, self.active, self.pinned):
             if s in lst:
@@ -844,21 +871,32 @@ class Engine:
         n_dec = sum(1 for s in self.active if s.phase == Phase.DECODING)
         return max(self.blocks.total // 100, 2 * n_dec)
 
-    def _stamp_swap_cost(self, s: Session, toks: int) -> None:
+    def _stamp_swap_cost(self, s: Session, toks: int, now: float) -> None:
         """``meta["swap_cost_s"]`` accounting, future-aware: the engineered-
         DMA restore time covers the private suffix only (shared prefix
         blocks were re-referenced on device, no PCIe traffic). When the
         async stream already crossed that suffix in the background (the
         swap-in future resolved before the session was batched, or there
         was nothing private to move), the restore serializes *nothing* —
-        the stamp is 0.0. Sim path: no futures, modeled cost, bit-identical
-        to the serialized-era accounting."""
+        the stamp is 0.0. Sim path: no futures, modeled cost, plus any
+        CPU-side delay of the H2D staging copy — the restore's bounce
+        buffers lease from the shared core pool, so a tool burst pushes
+        the restore out (``swap_cpu_wait_s``, surfaced on SWAP_IN for the
+        tracer's ``cpu_queue_wait`` attribution)."""
         fut = s.meta.pop("swap_in_future", None)
         if self._async_swap and (fut is None or fut.done()):
             s.meta["swap_cost_s"] = 0.0
         else:
-            s.meta["swap_cost_s"] = self.tiers.swap_seconds(
-                s.meta.get("host_tokens", toks))
+            swap_s = self.tiers.swap_seconds(s.meta.get("host_tokens", toks))
+            cpu_extra = 0.0
+            frac = self.cpu_pool.cfg.transfer_cpu_frac
+            if frac > 0.0 and swap_s > 0.0:
+                lease = self.cpu_pool.submit(now, frac * swap_s, sid=s.sid,
+                                             kind="swap", tag="h2d",
+                                             priority=0)
+                cpu_extra = max(0.0, lease.end - now - swap_s)
+            s.meta["swap_cost_s"] = swap_s + cpu_extra
+            s.meta["swap_cpu_wait_s"] = cpu_extra
 
     def _abandon_swap(self, s: Session, now: float) -> None:
         """Give up on a swapped-out session's host copy (stale certificate
@@ -927,7 +965,7 @@ class Engine:
                     need + reserve, now, in_batch, s, allow_preempt):
                 if self._restore_lease(s):
                     if tiered:
-                        self._stamp_swap_cost(s, toks)
+                        self._stamp_swap_cost(s, toks, now)
                     swapins.append((s, toks))
                     in_batch.add(s.sid)
                     return True
@@ -975,6 +1013,7 @@ class Engine:
             s.kv_state = KVState.RESIDENT
             s.meta["swapped_len"] = 0
             origin = s.meta.pop("kv_tier", "host")
+            cpu_wait = s.meta.pop("swap_cpu_wait_s", 0.0)
             for k in ("swap_pages", "restore_positions", "host_blocks",
                       "host_tokens", "swap_in_future",
                       "swap_cost_s"):        # consumed by run_batch above
@@ -987,6 +1026,7 @@ class Engine:
                 loaded = self.tiers.load(s.sid, end)
                 self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,
                               tier=origin, start=start,
+                              cpu_wait_s=cpu_wait,
                               accounted=loaded is not None)
             else:
                 self.bus.emit(ev.SWAP_IN, end, s.sid, tokens=toks,

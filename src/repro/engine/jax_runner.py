@@ -237,6 +237,14 @@ class JaxBackend:
         stream = getattr(self._impl, "stream", None)
         return stream.stats() if stream is not None else None
 
+    def bind_cpu_pool(self, pool) -> None:
+        """Engine hook: the swap stream's worker holds a core from the
+        shared pool while a crossing executes, so pool gauges account real
+        transfer CPU next to the tool threads. No-op without a stream."""
+        stream = getattr(self._impl, "stream", None)
+        if stream is not None:
+            stream.cpu_pool = pool
+
     # --- deterministic synthetic context ----------------------------------
     def _context_ids(self, s: Session) -> List[int]:
         """Token ids are *content-addressed*: round-0 chunks derive from

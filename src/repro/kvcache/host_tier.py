@@ -95,13 +95,17 @@ class HostTier:
         return sid in self._entries
 
     # --- lifecycle -----------------------------------------------------
-    def store(self, sid: int, tokens: int, blocks: int, now: float) -> float:
+    def store(self, sid: int, tokens: int, blocks: int, now: float, *,
+              extra_delay_s: float = 0.0) -> float:
         """Register an offload; returns modeled transfer seconds. The entry
         starts on the modeled "future" (restorable from ``now + seconds``
         on the sim clock); a live backend replaces that with the real
-        transfer future via ``mark_in_flight``/``attach_future``."""
+        transfer future via ``mark_in_flight``/``attach_future``.
+        ``extra_delay_s`` pushes restorability out beyond the DMA itself —
+        the TieredStore charges the D2H staging copy's CPU-pool queueing
+        delay through it."""
         assert sid not in self._entries, f"double offload of sid {sid}"
-        sec = self.swap_seconds(tokens)
+        sec = self.swap_seconds(tokens) + max(0.0, extra_delay_s)
         self._entries[sid] = _Entry(tokens, blocks, now + sec)
         self._used += blocks
         self.stores += 1

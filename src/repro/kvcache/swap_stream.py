@@ -133,8 +133,13 @@ class StagingBuffers:
 class SwapStream:
     """Single background worker executing transfer jobs in FIFO order."""
 
-    def __init__(self, n_buffers: int = 2, name: str = "kv-swap-stream"):
+    def __init__(self, n_buffers: int = 2, name: str = "kv-swap-stream", *,
+                 cpu_pool=None):
         self.staging = StagingBuffers(n_buffers)
+        # shared host-CPU core pool (live accounting): the worker holds one
+        # core while a crossing's copy pump executes, so pool gauges see
+        # real transfer CPU alongside tool threads. None => untracked.
+        self.cpu_pool = cpu_pool
         self._q: "queue.Queue[Optional[tuple]]" = queue.Queue()
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name=name)
@@ -203,6 +208,10 @@ class SwapStream:
             if item is None:
                 return
             fn, fut = item
+            pool, tok = self.cpu_pool, None
+            if pool is not None:
+                kind = "swap" if fut.direction in ("d2h", "h2d") else "spool"
+                tok = pool.acquire(time.monotonic(), kind)
             try:
                 t0 = time.monotonic()
                 value = fn()
@@ -218,6 +227,9 @@ class SwapStream:
                 fut._resolve(value)
             except BaseException as exc:          # surfaces at result()
                 fut._fail(exc)
+            finally:
+                if tok is not None:
+                    pool.release(time.monotonic(), tok)
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted job has executed (tests/teardown)."""

@@ -81,13 +81,20 @@ class TieredStore:
                  recompute_time: Optional[Callable[[int], float]] = None,
                  demote_after_s: float = 30.0,
                  demote_watermark: float = 0.5,
-                 bus=None):
+                 bus=None, cpu_pool=None):
         self.host = host
         self.disk = disk
         self.recompute_time = recompute_time
         self.demote_after_s = demote_after_s
         self.demote_watermark = demote_watermark
         self.bus = bus
+        # shared host-CPU core pool: every tier move stages through host
+        # cores (D2H/H2D memcpy pumps, spool read/write syscalls), so each
+        # transfer leases ``transfer_cpu_frac`` of its wire time from the
+        # pool at transfer priority; the lease's queueing delay pushes the
+        # entry's readiness out (a tool burst visibly delays swap drains
+        # and staged NVMe restores). None => transfers are CPU-free.
+        self.cpu_pool = cpu_pool
         self._meta: Dict[int, _EntryMeta] = {}
         # live data-plane callbacks (sid -> Optional[TransferFuture])
         self._spill = None
@@ -98,6 +105,24 @@ class TieredStore:
         self.demotions = 0
         self.staged_restores = 0       # promotions issued (disk -> host)
         self.direct_to_disk = 0
+        self.cpu_wait_s = 0.0          # readiness delay added by core waits
+
+    def _stage_cpu(self, now: float, sid: int, wire_s: float, kind: str,
+                   tag: str) -> float:
+        """Lease the staging-copy CPU for a ``wire_s``-second transfer from
+        the shared pool; returns the extra seconds (queueing + interference
+        beyond the wire time) the caller must add to the entry's readiness.
+        0.0 when no pool is bound or the transfer is free."""
+        if self.cpu_pool is None or wire_s <= 0.0:
+            return 0.0
+        frac = self.cpu_pool.cfg.transfer_cpu_frac
+        if frac <= 0.0:
+            return 0.0
+        lease = self.cpu_pool.submit(now, frac * wire_s, sid=sid,
+                                     kind=kind, tag=tag, priority=0)
+        extra = max(0.0, lease.end - (now + wire_s))
+        self.cpu_wait_s += extra
+        return extra
 
     def bind_backend(self, spill=None, unspill=None) -> None:
         """Live path: ``spill(sid)`` writes the backend's host KV copy of
@@ -156,11 +181,17 @@ class TieredStore:
         if target == "disk":
             self.direct_to_disk += 1
             # staged write: the D2H leg stages through bounded stream
-            # buffers (not host-tier capacity), then the NVMe write lands
+            # buffers (not host-tier capacity), then the NVMe write lands;
+            # the D2H pump's core wait stretches the staging leg
+            d2h = self.host.swap_seconds(tokens)
+            extra = self._stage_cpu(now, sid, d2h, "swap", "d2h")
             return self.disk.store(
                 sid, tokens, blocks, now,
-                extra_delay_s=self.host.swap_seconds(tokens))
-        return self.host.store(sid, tokens, blocks, now)
+                extra_delay_s=d2h + extra)
+        sec = self.host.swap_seconds(tokens)
+        extra = self._stage_cpu(now, sid, sec, "swap", "d2h")
+        return self.host.store(sid, tokens, blocks, now,
+                               extra_delay_s=extra)
 
     def mark_in_flight(self, sid: int) -> None:
         if self.host.holds(sid):
@@ -230,19 +261,24 @@ class TieredStore:
         tokens = self.disk.load(sid, now)
         assert tokens is not None      # caller checked disk.ready
         read_done = self.disk.issue_read(now, tokens)
+        # the fill pump (file read -> DRAM staging buffer) runs on shared
+        # cores: its queueing delay extends the first hop
+        extra = self._stage_cpu(now, sid, read_done - now, "spool", "fill")
+        done = read_done + extra
         fut = self._unspill(sid) if self._unspill is not None else None
         self.host.admit_staged(sid, tokens, blocks, now,
-                               transfer_s=read_done - now, future=fut)
+                               transfer_s=done - now, future=fut)
         m = self._meta.get(sid)
         if m is not None:
             m.stored_at = now          # promoted == hot: reset cold clock
             m.target = "host"
         self.staged_restores += 1
         if self.bus is not None:
-            # read_s: the NVMe read gating the staged restore's first hop —
-            # the tracer turns [t, t + read_s] into an I/O span
+            # read_s: the NVMe read (plus any fill-pump core wait) gating
+            # the staged restore's first hop — the tracer turns
+            # [t, t + read_s] into an I/O span
             self.bus.emit(PROMOTE, now, sid, blocks=blocks, tokens=tokens,
-                          read_s=read_done - now)
+                          read_s=done - now)
 
     def load(self, sid: int, now: float) -> Optional[int]:
         """Swap-in committed: consume the (host-resident) entry. Returns
@@ -314,7 +350,10 @@ class TieredStore:
             return False               # disk would not beat recompute: stay
         idle_s = now - m.stored_at
         tokens, blocks = self.host.evacuate(sid)
-        self.disk.store(sid, tokens, blocks, now)
+        # the spool-write pump leases cores too: its wait delays durability
+        extra = self._stage_cpu(now, sid, self.disk.write_seconds(tokens),
+                                "spool", "write")
+        self.disk.store(sid, tokens, blocks, now, extra_delay_s=extra)
         if self._spill is not None:
             fut = self._spill(sid)
             if fut is not None:
@@ -363,4 +402,5 @@ class TieredStore:
             "demotions": self.demotions,
             "staged_restores": self.staged_restores,
             "direct_to_disk": self.direct_to_disk,
+            "cpu_wait_s": round(self.cpu_wait_s, 6),
         }

@@ -175,6 +175,8 @@ def bind_engine_probes(reg: MetricsRegistry, engine) -> None:
     * ``telemetry`` — the dual-pressure snapshot (flags, churn EMA, offload
       /prefix/digest counters, per-kind tool EMAs)
     * ``kv_tiers`` — ``Telemetry.kv_tier_stats()`` (TieredStore breakdown)
+    * ``cpu_pool`` — shared host-core pool gauges (lease counts, busy and
+      queue-wait seconds per kind, peak backlog/stretch)
     * ``swap_stream`` — live-backend background stream counters + queue
       depth (absent on the sim path)
     * ``dispatch`` — live-path run_batch phase timing (absent in sim)
@@ -206,6 +208,9 @@ def bind_engine_probes(reg: MetricsRegistry, engine) -> None:
 
     reg.register_probe("telemetry", _telemetry)
     reg.register_probe("kv_tiers", telem.kv_tier_stats)
+    pool = getattr(engine, "cpu_pool", None)
+    if pool is not None:
+        reg.register_probe("cpu_pool", pool.stats)
     stream_stats = getattr(engine.backend, "swap_stream_stats", None)
     if stream_stats is not None:
         reg.register_probe("swap_stream", stream_stats)

@@ -40,6 +40,9 @@ _SESSION_TID_BASE = 100
 _COUNTER_FIELDS = (("free_blocks", "kv free blocks"),
                    ("active_tools", "active tools"),
                    ("waiting", "admission queue"),
+                   # shared host-core pool pressure (tools + swap + spool)
+                   ("cpu_busy", "cpu pool busy cores"),
+                   ("cpu_backlog", "cpu pool backlog"),
                    ("host_used", "host tier blocks"),
                    ("disk_used", "disk tier blocks"),
                    # live-backend prefill HBM traffic (cumulative): what

@@ -50,6 +50,7 @@ PLANE_OF = {
     "decode": "gpu",
     "tool_queue": "cpu",
     "tool_exec": "cpu",
+    "cpu_queue_wait": "cpu",
     "swap_in": "io",
     "restore_wait": "io",
     "demote": "io",
@@ -282,7 +283,15 @@ class Tracer:
         tr = self._trace(e)
         if tr is None:
             return
-        tr.close_wait(e.t, "tool_queue")
+        # split the pre-start wait: everything before the core-pool wait
+        # is ordinary tool-queue time (executor backlog), the trailing
+        # ``queue_wait`` seconds are CPU-pool core contention
+        qw = e.data.get("queue_wait", 0.0)
+        if qw > 0.0:
+            tr.close_wait(max(tr.cursor, e.t - qw), "tool_queue")
+            tr.close_wait(e.t, "cpu_queue_wait")
+        else:
+            tr.close_wait(e.t, "tool_queue")
         tr.tool_start = e.t
         tr.wait = "tool_exec"
 
@@ -309,7 +318,16 @@ class Tracer:
         tr = self._trace(e)
         if tr is None:
             return
-        tr.exec_segment("swap_in", e.data.get("start", e.t), e.t,
+        start = e.data.get("start", e.t)
+        # ``cpu_wait_s``: core-pool queueing charged into the restore cost
+        # (the H2D staging pump waited for a core before the DMA could
+        # run) — carve it out of the swap window as its own CPU segment
+        cw = min(e.data.get("cpu_wait_s", 0.0), max(0.0, e.t - start))
+        if cw > 0.0:
+            tr.close_wait(start)
+            tr.close_wait(start + cw, "cpu_queue_wait")
+            start = start + cw
+        tr.exec_segment("swap_in", start, e.t,
                         {"tokens": e.data.get("tokens", 0),
                          "tier": e.data.get("tier", "host")})
         tr.swapped = False

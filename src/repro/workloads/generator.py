@@ -65,6 +65,19 @@ LONG_TOOL_KINDS = {
 
 ALL_TOOL_KINDS = {**TOOL_KINDS, **LONG_TOOL_KINDS}
 
+# CPU-heavy mix (opt-in via ``WorkloadSpec.tool_mix``): the tool-dominated
+# agentic profile where host cores, not the GPU, become the bottleneck —
+# builds and test suites (test_runner) plus dense shell activity (terminal)
+# with little of the near-free bookkeeping kinds. The cpu_contention
+# benchmark drives the shared core pool into queueing with this mix; the
+# default uniform draw stays untouched (seeded baselines are byte-stable).
+TOOL_HEAVY_MIX = {
+    "test_runner": 4.0,
+    "terminal": 3.0,
+    "file_editor": 1.0,
+    "task_tracker": 0.5,
+}
+
 
 @dataclass
 class WorkloadSpec:

@@ -1,0 +1,286 @@
+"""Shared host-CPU core pool (core/cpu_pool) and its consumers: eager
+deterministic scheduling with interference stretch, cancel backfill,
+transfer-priority placement, the ToolExecutor protocol, the Services
+policy-binding API, and the control plane's CPU-oversubscription
+admission term."""
+import pytest
+
+from repro.core import events as ev
+from repro.core.admission import ControlPlaneConfig, ExternalControlPlane
+from repro.core.cpu_pool import CpuPool, CpuPoolConfig
+from repro.core.events import EventBus
+from repro.core.policies import MARSPolicy, Policy, Services
+from repro.core.session import Round, make_session
+from repro.core.telemetry import Telemetry, TelemetryConfig
+from repro.engine.tools import RealToolExecutor, SimToolExecutor, ToolExecutor
+
+
+class _Oracle:
+    def recompute_time(self, n_tokens):
+        return n_tokens / 1000.0
+
+    def swap_time(self, n_tokens):
+        return n_tokens / 5000.0
+
+    def prefill_rate(self):
+        return 1000.0
+
+
+def _pool(cores=2, interference=0.5):
+    return CpuPool(CpuPoolConfig(cores=cores, interference=interference))
+
+
+# ---------------------------------------------------------------------------
+# Pool scheduling model
+# ---------------------------------------------------------------------------
+
+def test_interference_stretch_deterministic():
+    """Eager placement fixes (start, end, stretch) at submit, and the same
+    submit sequence reproduces the identical schedule: stretch depends only
+    on co-busy cores at the placed start."""
+    for _ in range(2):                      # same sequence twice -> identical
+        p = _pool(cores=2, interference=0.5)
+        a = p.submit(0.0, 10.0)
+        b = p.submit(0.0, 10.0)
+        c = p.submit(0.0, 10.0)
+        assert (a.start, a.stretch, a.end) == (0.0, 1.0, 10.0)
+        # b starts beside running a: 1 busy other core of 2 -> 1.25x
+        assert (b.start, b.stretch, b.end) == (0.0, 1.25, 12.5)
+        # c queues behind a (earliest core), placed beside still-running b
+        assert (c.start, c.stretch, c.end) == (10.0, 1.25, 22.5)
+        assert c.queue_wait == pytest.approx(10.0)
+
+
+def test_cancel_queued_releases_core_and_backfills():
+    p = _pool(cores=1, interference=0.0)
+    a = p.submit(0.0, 10.0)
+    b = p.submit(0.0, 10.0)
+    c = p.submit(0.0, 5.0)
+    assert (b.start, b.end) == (10.0, 20.0)
+    assert (c.start, c.end) == (20.0, 25.0)
+    p.cancel(b, 0.0)
+    # c backfills into b's released slot; a's announced schedule never moves
+    assert (a.start, a.end) == (0.0, 10.0)
+    assert (c.start, c.end) == (10.0, 15.0)
+    assert p.next_event_time() == 10.0
+
+
+def test_cancel_running_frees_core_now():
+    p = _pool(cores=1, interference=0.0)
+    a = p.submit(0.0, 10.0)
+    b = p.submit(0.0, 10.0)
+    p.advance(1.0)                          # a reported started
+    p.cancel(a, 4.0)
+    assert (b.start, b.end) == (4.0, 14.0)
+
+
+def test_transfer_priority_placed_ahead_of_queued_tools():
+    """A class-0 staging copy goes ahead of waiting tools (never preempts a
+    running one) and pushes the queued tool back by its service time."""
+    p = _pool(cores=1, interference=0.0)
+    a = p.submit(0.0, 10.0, kind="tool")
+    b = p.submit(0.0, 10.0, kind="tool")
+    sw = p.submit(0.0, 2.0, kind="swap", priority=0)
+    assert (a.start, a.end) == (0.0, 10.0)      # running: untouched
+    assert (sw.start, sw.end) == (10.0, 12.0)   # jumps the queued tool
+    assert (b.start, b.end) == (12.0, 22.0)
+    assert p.next_event_time("swap") == 12.0
+
+
+def test_horizon_wait_is_work_in_system_over_cores():
+    p = _pool(cores=4, interference=0.0)
+    p.submit(0.0, 10.0)
+    p.submit(0.0, 10.0)
+    assert p.horizon_wait(0.0) == pytest.approx(5.0)        # 20s over 4 cores
+    assert p.horizon_wait(0.0, extra_backlog_s=20.0) == pytest.approx(10.0)
+    assert p.horizon_wait(10.0) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Executors on the shared pool
+# ---------------------------------------------------------------------------
+
+def _sim_exec(cores=1):
+    bus = EventBus()
+    pool = CpuPool(CpuPoolConfig(cores=cores, interference=0.0))
+    return SimToolExecutor(pool, bus), bus
+
+
+def _tool_session(t0=0.0):
+    return make_session(t0, [Round(320, 10, "terminal", 5.0),
+                             Round(32, 10, None, 0.0)])
+
+
+def test_sim_executor_next_event_time_includes_queueing():
+    ex, _ = _sim_exec(cores=1)
+    s1, s2 = _tool_session(), _tool_session()
+    ex.start(s1, "terminal", 10.0, 0.0)
+    ex.start(s2, "terminal", 10.0, 0.0)
+    assert ex.next_event_time() == 10.0
+    done = ex.poll(10.0)
+    assert [s.sid for s in done] == [s1.sid]
+    # s2's completion is at 20.0 (10s queue wait + 10s service), not 10.0
+    assert ex.next_event_time() == 20.0
+    assert ex.poll(20.0) == [s2]
+
+
+def test_sim_executor_cancel_releases_pool_lease():
+    ex, _ = _sim_exec(cores=1)
+    s1, s2, s3 = _tool_session(), _tool_session(), _tool_session()
+    ex.start(s1, "terminal", 10.0, 0.0)
+    ex.start(s2, "terminal", 10.0, 0.0)
+    ex.start(s3, "terminal", 5.0, 0.0)
+    ex.cancel(s2.sid, 0.0)
+    # s3 backfills into the released slot: completes at 15, not 25
+    assert ex.next_event_time() == 10.0
+    assert ex.poll(10.0) == [s1]
+    assert ex.next_event_time() == 15.0
+    assert ex.poll(15.0) == [s3]
+    # the cancelled session never completes, and nothing lingers
+    assert ex.poll(100.0) == []
+    assert ex.active == 0 and ex.backlog == 0
+
+
+def test_tool_start_event_carries_queue_wait():
+    ex, bus = _sim_exec(cores=1)
+    waits = {}
+    bus.subscribe(ev.TOOL_START,
+                  lambda e: waits.__setitem__(e.sid, e.data["queue_wait"]))
+    s1, s2 = _tool_session(), _tool_session()
+    ex.start(s1, "terminal", 10.0, 0.0)
+    ex.start(s2, "terminal", 10.0, 0.0)
+    ex.poll(20.0)
+    assert waits[s1.sid] == pytest.approx(0.0)
+    assert waits[s2.sid] == pytest.approx(10.0)
+
+
+def test_executor_protocol_conformance():
+    sim, _ = _sim_exec()
+    assert isinstance(sim, ToolExecutor)
+    real = RealToolExecutor(2, EventBus())
+    try:
+        assert isinstance(real, ToolExecutor)
+        # both draw capacity from a CpuPool (shared with swap/spool staging)
+        assert isinstance(sim.pool, CpuPool)
+        assert isinstance(real.pool, CpuPool)
+        assert real.next_event_time() is None   # wall-clock path
+    finally:
+        real.shutdown()
+
+
+def test_executors_share_one_pool_with_transfers():
+    """A transfer lease on the shared pool delays a queued tool — the
+    coupled-pressure behavior the executor protocol exists for."""
+    pool = CpuPool(CpuPoolConfig(cores=1, interference=0.0))
+    ex = SimToolExecutor(pool, EventBus())
+    s = _tool_session()
+    pool.submit(0.0, 4.0, kind="swap", priority=0)
+    ex.start(s, "terminal", 10.0, 0.0)
+    assert ex.next_event_time() == 14.0
+
+
+# ---------------------------------------------------------------------------
+# Services binding API (and the bind_services deprecation shim)
+# ---------------------------------------------------------------------------
+
+def _telem(cpu_slots=8):
+    bus = EventBus()
+    return Telemetry(TelemetryConfig(cpu_slots=cpu_slots), bus), bus
+
+
+def test_policy_bind_services_dataclass():
+    t, bus = _telem()
+    p = Policy(t, bus, _Oracle())
+    pool, tier = object(), object()
+    p.bind(Services(host_tier=tier, async_swap=True, cpu_pool=pool))
+    assert p.host_tier is tier
+    assert p.async_swap is True
+    assert p.cpu_pool is pool
+    assert p.disk_tier is None
+
+
+def test_bind_services_shim_warns_and_routes_through_bind():
+    """The deprecated kwarg form must route through bind(), so subclass
+    extensions (MARS wiring control.cpu_pool / cosched.cpu_wait) still
+    run."""
+    t, bus = _telem()
+    p = MARSPolicy(t, bus, _Oracle())
+    pool = _pool(cores=2)
+    with pytest.warns(DeprecationWarning):
+        p.bind_services(cpu_pool=pool)
+    assert p.cpu_pool is pool
+    assert p.control.cpu_pool is pool
+    assert p.cosched.cpu_wait is not None
+    # and the modern path wires identically
+    p2 = MARSPolicy(t, bus, _Oracle())
+    p2.bind(Services(cpu_pool=pool))
+    assert p2.control.cpu_pool is pool
+    assert p2.cosched.cpu_wait is not None
+
+
+# ---------------------------------------------------------------------------
+# Admission CPU-oversubscription term
+# ---------------------------------------------------------------------------
+
+def _control_plane(bound_s, cores=2):
+    t, bus = _telem(cpu_slots=8)
+    t.probe_gpu(100_000, 100_000, 0, 0, 0, 0)
+    cp = ExternalControlPlane(
+        ControlPlaneConfig(w_init=16.0, cpu_queue_bound_s=bound_s), t, bus)
+    cp.cpu_pool = CpuPool(CpuPoolConfig(cores=cores))
+    return cp, bus
+
+
+def _admission_sessions():
+    """Ascending-footprint order: two tool-bearing sessions then a
+    tool-free one (per-kind EMA is empty, so each tool round prices at the
+    8s telemetry default)."""
+    s1 = make_session(0.0, [Round(3200, 10, "terminal", 5.0),
+                            Round(32, 10, None, 0.0)])
+    s2 = make_session(0.01, [Round(6400, 10, "terminal", 5.0),
+                             Round(32, 10, None, 0.0)])
+    s3 = make_session(0.02, [Round(9600, 10, None, 0.0)])
+    return s1, s2, s3
+
+
+def test_admission_defers_on_committed_cpu_but_passes_tool_free():
+    cp, _ = _control_plane(bound_s=1.0)
+    s1, s2, s3 = _admission_sessions()
+    admitted = cp.balance_and_admit([s1, s2, s3], now=0.0)
+    # s1 admits on the idle pool (its own estimate never prices itself);
+    # its 8s/2-core commitment then pushes s2 past the 1s bound; the
+    # tool-free s3 behind it still passes
+    assert [s.sid for s in admitted] == [s1.sid, s3.sid]
+    assert cp.cpu_deferred == 1
+
+
+def test_admission_commitment_cleared_on_finish():
+    cp, bus = _control_plane(bound_s=1.0)
+    s1, s2, _ = _admission_sessions()
+    cp.balance_and_admit([s1, s2], now=0.0)
+    assert cp.cpu_deferred == 1
+    # a deferral is a skip, not a reject: once the admitted session
+    # finishes (commitment released) the deferred one gets in
+    bus.emit(ev.FINISH, 50.0, s1.sid)
+    admitted = cp.balance_and_admit([s2], now=50.0)
+    assert [s.sid for s in admitted] == [s2.sid]
+
+
+def test_admission_prices_scheduled_pool_work():
+    cp, _ = _control_plane(bound_s=1.0)
+    s1, _, s3 = _admission_sessions()
+    # park long tool leases on every core: horizon_wait >> bound
+    cp.cpu_pool.submit(0.0, 100.0, kind="tool")
+    cp.cpu_pool.submit(0.0, 100.0, kind="tool")
+    admitted = cp.balance_and_admit([s1, s3], now=0.0)
+    assert [s.sid for s in admitted] == [s3.sid]
+    assert cp.cpu_deferred == 1
+
+
+def test_admission_term_off_by_default():
+    cp, _ = _control_plane(bound_s=float("inf"))
+    s1, s2, s3 = _admission_sessions()
+    cp.cpu_pool.submit(0.0, 1000.0, kind="tool")
+    admitted = cp.balance_and_admit([s1, s2, s3], now=0.0)
+    assert len(admitted) == 3
+    assert cp.cpu_deferred == 0
