@@ -69,6 +69,7 @@ def _run_layout(layout: str, *, K: int, shared_chunks: int, tail_chunks: int,
     t0 = time.monotonic()
     i = 0
     peak_pages = 0
+    peak_shared = 0
     decode_ticks: List[float] = []
     ticks = 0
     while ticks < 50_000:
@@ -79,7 +80,13 @@ def _run_layout(layout: str, *, K: int, shared_chunks: int, tail_chunks: int,
             i += 1
         elapsed, progressed = eng.tick(now)
         n_dec = sum(1 for s in eng.active if s.phase.value == "decoding")
-        peak_pages = max(peak_pages, eng.blocks.probe().physical)
+        pr = eng.blocks.probe()
+        peak_pages = max(peak_pages, pr.physical)
+        # logical refs minus physical blocks = references satisfied by an
+        # already-resident block: nonzero iff sharing is physical. Unlike
+        # the peak-residency ratio this is wall-clock independent — it
+        # needs members to *attach*, not to overlap just so.
+        peak_shared = max(peak_shared, pr.leased - pr.physical)
         if elapsed > 0 and n_dec >= K - 1:   # steady family-wide decode
             decode_ticks.append(elapsed)
         if eng.done() and i >= len(arrivals):
@@ -92,6 +99,7 @@ def _run_layout(layout: str, *, K: int, shared_chunks: int, tail_chunks: int,
         "figure": "paged_runner",
         "name": f"{layout}",
         "peak_device_pages": peak_pages,
+        "peak_shared_refs": peak_shared,
         "prefill_tokens_computed": eng.prefill_tokens_computed,
         "prefix_hit_tokens": eng.prefix_hit_tokens,
         # analytic HBM bytes-touched counters kept by the paged layout's
@@ -125,6 +133,13 @@ def run(quick: bool = True, dry: bool = False) -> List[Dict]:
         "figure": "paged_runner", "name": "residency_ratio",
         "paged_over_dense": round(ratio, 3),
         "physical_sharing": ratio < 0.6,
+        # structural sharing proof: peak count of block references backed
+        # by an already-resident physical block. This is what baselines.json
+        # gates in the CI smoke — the peak-residency *ratio* depends on how
+        # the two layouts' prefills overlap the wall-clocked arrivals, which
+        # made the dry gate environment-sensitive; the timing-grade ratio
+        # claim stays asserted on non-dry (nightly) runs below.
+        "shared_block_refs": paged["peak_shared_refs"],
         "prefill_tokens_saved": dense["prefill_tokens_computed"]
                                 - paged["prefill_tokens_computed"],
     })

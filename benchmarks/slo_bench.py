@@ -1,0 +1,255 @@
+"""Incident-plane proof benchmark: detection latency + precision/recall.
+
+Every detector in ``repro.obs.detect`` is proven against a *known* fault:
+``repro.engine.faults.FaultPlan`` injects one deterministic failure per
+scenario (stuck tool, frozen admission, degraded PCIe, frozen decode
+lane, co-tenant CPU flood, event-ring overflow) into a seeded sim run
+with the full online observability stack installed (DetectorSuite +
+SloTracker + FlightRecorder), and the bench measures:
+
+* **recall** — every injected fault class raises its expected incident
+  kind (gated at 1.0: a silent fault is a broken detector);
+* **false incidents** — two clean control runs (the plain config and the
+  KV-pressured config the swap scenarios use) must raise *zero*
+  incidents (gated at 0: a noisy detector is worse than none);
+* **detection latency** — modeled seconds from fault activation to the
+  first expected incident (gated loose; the point is a bound, not a
+  race);
+* **precision** — fraction of incidents across fault runs whose kind is
+  expected *or* a documented secondary effect of that fault (a CPU flood
+  genuinely stalls admission — that is a true positive, not noise).
+
+Everything runs on the modeled clock, so rows are bit-stable across
+machines and dry/quick/full — the sizes below are used for all modes.
+``--bundle-dir DIR`` keeps the flight-recorder bundles (CI smokes
+``scripts/trace_report.py`` over one).
+
+SLO accounting rides along: the clean rows carry goodput under the
+``standard`` class so a collapsed-but-incident-free run still shows up.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.configs.qwen3_coder_30b import CONFIG
+from repro.core.events import EventBus
+from repro.engine.backend import SimBackend
+from repro.engine.engine import Engine, EngineConfig, run_sim
+from repro.engine.faults import Fault, FaultPlan
+from repro.models.perf_model import H100
+from repro.obs import DetectorSuite, FlightRecorder, SloTracker
+from repro.workloads.generator import WorkloadSpec, generate
+
+SEED = 7
+# short-mode tool times keep the stuck-tool bound (4x nominal) well inside
+# the run's active window, so detection happens while ticks still flow
+TOOL_SCALE = 0.25
+# plain scenarios spread arrivals over ~400 modeled seconds: faults need
+# live traffic *after* they bite (ticks only flow while sessions run), and
+# frozen admission only stalls something if sessions still arrive behind it
+PLAIN_RATE, PLAIN_N = 0.06, 24
+PRESSURED_RATE, PRESSURED_N = 0.33, 16
+
+# scenario -> (fault kwargs, expected incident kind, allowed secondary
+# kinds: genuine downstream effects of the fault, counted as true
+# positives for precision)
+SCENARIOS: Dict[str, dict] = {
+    "stuck_tool": {
+        "fault": dict(kind="stuck_tool", at_s=100.0),
+        "expect": "tool_stall",
+        "allowed": {"decode_livelock"},
+    },
+    "frozen_admission": {
+        "fault": dict(kind="frozen_admission", at_s=150.0),
+        "expect": "admission_stall",
+        "allowed": set(),
+    },
+    "slowed_swap": {
+        "fault": dict(kind="slowed_swap", at_s=200.0, factor=200.0),
+        "expect": "swap_storm",
+        "allowed": {"decode_livelock", "tool_stall"},
+        "pressured": True,
+    },
+    "freeze_decode": {
+        "fault": dict(kind="freeze_decode", at_s=150.0),
+        "expect": "decode_livelock",
+        "allowed": set(),
+    },
+    "cpu_flood": {
+        "fault": dict(kind="cpu_flood", at_s=120.0, cpu_work_s=300.0,
+                      n_leases=64),
+        "expect": "cpu_queue_collapse",
+        # the flood really does freeze admission (CPU-aware deferral) and
+        # stretch tool turnarounds past their promises
+        "allowed": {"admission_stall", "tool_stall"},
+    },
+    "event_loss": {
+        "fault": None,                  # the fault *is* the tiny ring
+        "expect": "event_loss",
+        "allowed": set(),
+        "max_log": 2000,
+        "dense": True,                  # ring overflows in seconds; no need
+                                        # for the long-arrival workload
+    },
+}
+
+
+def _spec(pressured: bool, dense: bool = False) -> WorkloadSpec:
+    if dense:
+        return WorkloadSpec(regime="S-ILR1", arrival_rate=PRESSURED_RATE,
+                            n_sessions=PRESSURED_N, seed=SEED,
+                            max_context=40_000, tool_time_scale=TOOL_SCALE,
+                            slo_class="standard")
+    if pressured:
+        # long-idle tool mix + tight KV: MARS parks KV in the host tier at
+        # every yield and swaps it back on resume — steady io traffic for
+        # the storm detector to watch
+        return WorkloadSpec(regime="S-ILR1", arrival_rate=PRESSURED_RATE,
+                            n_sessions=PRESSURED_N, seed=SEED,
+                            max_context=40_000,
+                            tool_mix={"terminal": 0.3, "file_editor": 0.2,
+                                      "test_runner": 0.5},
+                            tool_time_scale=TOOL_SCALE,
+                            slo_class="standard")
+    return WorkloadSpec(regime="S-ILR1", arrival_rate=PLAIN_RATE,
+                        n_sessions=PLAIN_N, seed=SEED,
+                        max_context=40_000, tool_time_scale=TOOL_SCALE,
+                        slo_class="standard")
+
+
+def _engine(pressured: bool, max_log: Optional[int]) -> Engine:
+    if pressured:
+        cfg = EngineConfig(total_kv_blocks=2048, block_size=32,
+                           token_budget=8192, max_decode_batch=64,
+                           decode_granularity=8, cpu_slots=32,
+                           host_tier_blocks=8192)
+    else:
+        cfg = EngineConfig(total_kv_blocks=16_384, block_size=32,
+                           token_budget=8192, max_decode_batch=64,
+                           decode_granularity=8, cpu_slots=32)
+    return Engine(cfg, "mars", SimBackend(CONFIG, H100),
+                  bus=EventBus(max_log=max_log))
+
+
+def _run_scenario(name: str, *, fault: Optional[dict], pressured: bool,
+                  max_log: Optional[int], bundle_dir: Optional[str],
+                  dense: bool = False) -> dict:
+    eng = _engine(pressured, max_log)
+    suite = DetectorSuite.install(eng)
+    slo = SloTracker.install(eng)
+    rec = None
+    if bundle_dir is not None:
+        import os
+        d = os.path.join(bundle_dir, name)
+        os.makedirs(d, exist_ok=True)
+        rec = FlightRecorder.install(eng, d, max_events=50_000)
+    plan = None
+    if fault is not None:
+        plan = FaultPlan([Fault(**fault)]).install(eng)
+    sessions = generate(_spec(pressured, dense), CONFIG, H100)
+    finished, horizon = run_sim(eng, sessions, max_time=6000.0)
+    return {"suite": suite, "slo": slo, "rec": rec, "plan": plan,
+            "finished": len(finished), "horizon": horizon,
+            "events": len(eng.bus.log), "dropped": eng.bus.dropped}
+
+
+def run(quick: bool = True, dry: bool = False,
+        bundle_dir: Optional[str] = None) -> List[Dict]:
+    rows: List[Dict] = []
+
+    # -- clean controls: zero incidents on both configs -------------------
+    false_incidents = 0
+    clean_detail: Dict[str, int] = {}
+    goodput = {}
+    for label, pressured in (("plain", False), ("pressured", True)):
+        r = _run_scenario(f"clean_{label}", fault=None, pressured=pressured,
+                          max_log=None, bundle_dir=None)
+        false_incidents += len(r["suite"].incidents)
+        for inc in r["suite"].incidents:
+            clean_detail[inc["kind"]] = clean_detail.get(inc["kind"], 0) + 1
+        rep = r["slo"].report()["classes"].get("standard", {})
+        goodput[label] = round(rep.get("goodput_frac", 0.0), 4)
+    rows.append({"figure": "slo", "name": "clean",
+                 "false_incidents": false_incidents,
+                 "false_by_kind": clean_detail,
+                 "goodput_frac_plain": goodput.get("plain", 0.0),
+                 "goodput_frac_pressured": goodput.get("pressured", 0.0)})
+
+    # -- fault scenarios --------------------------------------------------
+    detected = 0
+    latencies: List[float] = []
+    tp = fp = 0
+    for name, sc in SCENARIOS.items():
+        fault = sc["fault"]
+        r = _run_scenario(name, fault=fault,
+                          pressured=sc.get("pressured", False),
+                          max_log=sc.get("max_log"),
+                          bundle_dir=bundle_dir,
+                          dense=sc.get("dense", False))
+        suite = r["suite"]
+        expect = sc["expect"]
+        allowed = {expect} | sc["allowed"]
+        hits = [i for i in suite.incidents if i["kind"] == expect]
+        ok = bool(hits)
+        detected += ok
+        at_s = fault["at_s"] if fault is not None else None
+        latency = (hits[0]["t"] - at_s) if (ok and at_s is not None) \
+            else None
+        if latency is not None:
+            latencies.append(latency)
+        n_tp = sum(1 for i in suite.incidents if i["kind"] in allowed)
+        n_fp = len(suite.incidents) - n_tp
+        tp += n_tp
+        fp += n_fp
+        rows.append({
+            "figure": "slo", "name": f"fault_{name}",
+            "expect": expect, "detected": int(ok),
+            "latency_s": round(latency, 2) if latency is not None else None,
+            "incidents": len(suite.incidents),
+            "by_kind": {k: suite.count(k)
+                        for k in {i["kind"] for i in suite.incidents}},
+            "unexpected": n_fp,
+            "bundles": len(r["rec"].bundles) if r["rec"] else 0,
+            "fault_hits": plan_hits(r["plan"]),
+            "finished": r["finished"],
+            "horizon_s": round(r["horizon"], 1),
+            "dropped_events": r["dropped"],
+        })
+
+    recall = detected / len(SCENARIOS)
+    precision = tp / max(1, tp + fp)
+    rows.append({
+        "figure": "slo", "name": "detection",
+        "faults": len(SCENARIOS), "detected": detected,
+        "recall": round(recall, 4), "precision": round(precision, 4),
+        "max_latency_s": round(max(latencies), 2) if latencies else None,
+        "mean_latency_s": round(sum(latencies) / len(latencies), 2)
+        if latencies else None,
+    })
+    assert false_incidents == 0, \
+        f"clean runs raised incidents: {clean_detail}"
+    assert recall == 1.0, \
+        f"undetected faults: {[r['name'] for r in rows if r.get('detected') == 0]}"
+    return rows
+
+
+def plan_hits(plan: Optional[FaultPlan]) -> int:
+    if plan is None:
+        return 0
+    return sum(f["hits"] for f in plan.summary())
+
+
+if __name__ == "__main__":
+    try:
+        from common import bench_main
+    except ModuleNotFoundError:
+        from benchmarks.common import bench_main
+
+    def _add_args(ap):
+        ap.add_argument("--bundle-dir", dest="bundle_dir", metavar="DIR",
+                        default=None,
+                        help="keep flight-recorder incident bundles here")
+        return ["bundle_dir"]
+
+    bench_main(run, dry_help="deterministic sim faults (same sizes in "
+               "all modes)", add_args=_add_args)

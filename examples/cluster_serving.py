@@ -45,11 +45,15 @@ def main():
     router = ClusterRouter(RouterConfig(heartbeat_timeout=15.0))
     engines = {}
     tracers = {}
+    from repro.obs import DetectorSuite
+    detectors = {}
     for i in range(args.replicas):
         rid = f"replica-{i}"
         engines[rid] = Engine(EngineConfig(total_kv_blocks=blocks,
                                            cpu_slots=16), "mars", backend)
         router.register(rid, engines[rid], now=0.0)
+        # per-replica incident detectors feed the fleet health rollup
+        detectors[rid] = DetectorSuite.install(engines[rid])
         if args.trace:
             from repro.obs import Tracer
             tracers[rid] = Tracer.install(engines[rid])
@@ -109,6 +113,12 @@ def main():
           f"{prefix['cluster_prefix_queries']} sessions, "
           f"{prefix['cluster_indexed_blocks']} indexed blocks across "
           f"{len(prefix['replicas'])} advertising replicas")
+
+    # fleet health rollup: router vitals (liveness, draining, requeue
+    # depth) joined with each replica's incident counters
+    from repro.obs import HealthReport
+    print()
+    print(HealthReport.collect(router, detectors=detectors).render())
     if args.trace:
         from repro.obs import breakdown_table, export_perfetto
         export_perfetto(tracers, args.trace)

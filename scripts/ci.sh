@@ -52,13 +52,23 @@ python benchmarks/tiered_store_bench.py --dry --json "$BENCH_JSON_DIR/tiered_sto
 python benchmarks/continuous_batching_bench.py --dry --json "$BENCH_JSON_DIR/continuous_batching.json"
 python benchmarks/cpu_contention_bench.py --dry --json "$BENCH_JSON_DIR/cpu_contention.json"
 # obs bench also writes a Perfetto trace; trace_report validates the
-# exporter's schema (nonzero exit on violations) and prints the breakdown
+# exporter's schema (nonzero exit on violations) and prints the breakdown.
+# --strict: the full-fidelity export must not be lossy (dropped events)
 python benchmarks/obs_overhead_bench.py --dry --json "$BENCH_JSON_DIR/obs.json" \
     --trace "$BENCH_JSON_DIR/obs_trace.json"
-python scripts/trace_report.py "$BENCH_JSON_DIR/obs_trace.json" --max-rows 5
+python scripts/trace_report.py "$BENCH_JSON_DIR/obs_trace.json" --max-rows 5 --strict
+# incident plane: fault-injection detection recall/precision + clean-run
+# false-positive gate; flight-recorder bundles land under BENCH_JSON_DIR
+# (the workflow uploads them as artifacts)
+python benchmarks/slo_bench.py --dry --json "$BENCH_JSON_DIR/slo.json" \
+    --bundle-dir "$BENCH_JSON_DIR/slo_bundles"
+# smoke trace_report over a recorder bundle (ring-truncated by design, so
+# no --strict here — the dump replays to a partial timeline, not an error)
+SLO_BUNDLE=$(find "$BENCH_JSON_DIR/slo_bundles" -name events.jsonl | sort | head -n1)
+python scripts/trace_report.py "$SLO_BUNDLE" --max-rows 5
 # docs hygiene: every relative link in README.md and docs/ must resolve
 python scripts/check_docs_links.py
-# the nine fresh files are named explicitly — a glob would also pick up
+# the ten fresh files are named explicitly — a glob would also pick up
 # stale/quick-config rows persisting in an externally-supplied dir (e.g.
 # nightly's *-quick.json), and same-(figure,name) rows would shadow these
 python scripts/check_bench.py --baselines benchmarks/baselines.json \
@@ -66,4 +76,4 @@ python scripts/check_bench.py --baselines benchmarks/baselines.json \
     "$BENCH_JSON_DIR"/paged_runner.json "$BENCH_JSON_DIR"/swap_stream.json \
     "$BENCH_JSON_DIR"/cross_replica.json "$BENCH_JSON_DIR"/tiered_store.json \
     "$BENCH_JSON_DIR"/obs.json "$BENCH_JSON_DIR"/continuous_batching.json \
-    "$BENCH_JSON_DIR"/cpu_contention.json
+    "$BENCH_JSON_DIR"/cpu_contention.json "$BENCH_JSON_DIR"/slo.json

@@ -15,6 +15,13 @@
 
 Either way the output is the per-session latency-breakdown table, the
 fleet-level per-plane aggregate, and the top-k critical-path segments.
+
+Lossy traces (the source ring evicted events: nonzero ``dropped`` in the
+JSONL ``trace_meta`` header or the Perfetto ``otherData.dropped_events``)
+print a warning — every exclusive-timeline number is then a lower bound.
+``--strict`` turns the warning into exit code 2 (CI gates the nightly
+full-fidelity export with it; flight-recorder bundles are ring-truncated
+by design and are smoked *without* it).
 """
 from __future__ import annotations
 
@@ -134,9 +141,15 @@ def rows_from_perfetto(trace: dict, top: int = 5) -> List[dict]:
     return rows
 
 
-def rows_from_jsonl(path: str, top: int = 5) -> List[dict]:
-    tr = Tracer.replay(load_events_jsonl(path))
-    return [tr.critical_path(sid, top=top) for sid in tr.finished_sids()]
+def rows_from_jsonl(path: str, top: int = 5) -> Tuple[List[dict], int]:
+    """(critical-path rows, upstream dropped-event count). The dump's
+    ``trace_meta`` header carries the source ring's eviction counter."""
+    events = load_events_jsonl(path)
+    dropped = sum(int(e.data.get("dropped", 0)) for e in events
+                  if e.kind == "trace_meta")
+    tr = Tracer.replay(events)
+    return ([tr.critical_path(sid, top=top)
+             for sid in tr.finished_sids()], dropped)
 
 
 def top_segments(rows: List[dict], k: int) -> List[dict]:
@@ -157,6 +170,9 @@ def main(argv=None) -> int:
                     help="session rows to show in the table")
     ap.add_argument("--json", action="store_true",
                     help="emit machine-readable JSON instead of tables")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 2 if the trace is lossy (dropped events "
+                         "upstream — timelines are lower bounds)")
     args = ap.parse_args(argv)
 
     with open(args.trace) as f:
@@ -178,15 +194,25 @@ def main(argv=None) -> int:
                   file=sys.stderr)
             return 1
         rows = rows_from_perfetto(doc, top=args.top)
+        dropped = int(doc.get("otherData", {}).get("dropped_events", 0))
         src = "perfetto"
     else:
-        rows = rows_from_jsonl(args.trace, top=args.top)
+        rows, dropped = rows_from_jsonl(args.trace, top=args.top)
         src = "jsonl"
     rows = [r for r in rows if r is not None]
+
+    if dropped:
+        print(f"WARNING: lossy trace — {dropped} event(s) evicted from the "
+              f"source ring before export; timelines are lower bounds",
+              file=sys.stderr)
+        if args.strict:
+            print("--strict: failing on lossy trace", file=sys.stderr)
+            return 2
 
     tops = top_segments(rows, args.top)
     if args.json:
         print(json.dumps({"source": src, "sessions": len(rows),
+                          "dropped_events": dropped,
                           "rows": rows, "top_segments": tops}, indent=1))
         return 0
     print(f"# {args.trace} ({src}): {len(rows)} finished sessions")

@@ -8,7 +8,7 @@ a session changes execution state on either plane:
                    decode_step, carrying the executed interval)
     CPU plane:     tool_enqueue / tool_start / tool_end
     Control plane: submit / reject / window_update / admit / evict / pin /
-                   unpin / preempt / retention / tick
+                   unpin / preempt / retention / tick / incident
     I/O plane:     swap_out / swap_in / demote / promote / swap_abandon
 
 Both the external control plane and the internal scheduler consume the same
@@ -53,6 +53,8 @@ DEMOTE = "demote"              # tiered store: host DRAM -> NVMe migration
 PROMOTE = "promote"            # tiered store: NVMe -> host DRAM (staged restore)
 PREFIX_HIT = "prefix_hit"      # cold prefill attached to shared radix blocks
 FINISH = "finish"
+INCIDENT = "incident"          # obs.detect: structured anomaly w/ evidence
+TRACE_META = "trace_meta"      # JSONL dump header (dropped-event count)
 
 
 @dataclass(frozen=True)

@@ -206,6 +206,9 @@ class Engine:
         # phase wall timings + retention audit records are only worth their
         # perf_counter calls when something is listening
         self.trace_ticks = False
+        # deterministic fault injection (engine.faults.FaultPlan.install):
+        # None in production — every hook is a single identity check
+        self.faults = None
 
     # ------------------------------------------------------------------
     def submit(self, s: Session) -> None:
@@ -222,7 +225,11 @@ class Engine:
                           tokens=total_tokens)
             return
         self.bus.emit(ev.SUBMIT, s.arrival_time, s.sid, tokens=total_tokens,
-                      rounds=len(s.rounds))
+                      rounds=len(s.rounds),
+                      # SLO contract rides the stream so obs.slo can track
+                      # against it live or from a replayed dump alike
+                      slo_class=s.meta.get("slo_class"),
+                      slo_alpha=s.slo_alpha, ideal_s=s.ideal_time)
         hashes = s.meta.get("prefix_hashes")
         if hashes is not None:
             # the radix assumes one chunk == one KV block; a workload
@@ -308,6 +315,8 @@ class Engine:
         trace = self.trace_ticks
         t0 = time.perf_counter() if trace else 0.0
         progressed = False
+        if self.faults is not None:
+            self.faults.apply(self, now)
         # 1. tool completions
         for s in self.tools.poll(now):
             if s not in self.active:
@@ -319,7 +328,8 @@ class Engine:
         self.telem.tick()
         t1 = time.perf_counter() if trace else 0.0
         # 3. admission
-        if self.waiting:
+        if self.waiting and not (self.faults is not None and
+                                 self.faults.active("frozen_admission", now)):
             admitted = self.policy.admit(self.waiting, now)
             for s in admitted:
                 self.waiting.remove(s)
@@ -396,6 +406,7 @@ class Engine:
                 prefill_tokens=sum(cch for _, cch in work.prefills),
                 active=len(self.active), waiting=len(self.waiting),
                 free_blocks=self.blocks.free,
+                total_blocks=self.blocks.total,
                 active_tools=self.telem.active_tools,
                 cpu_busy=self.cpu_pool.busy_cores(now),
                 cpu_backlog=self.cpu_pool.backlog(now),
@@ -788,6 +799,15 @@ class Engine:
         ready = [s for s in self.active
                  if s.phase in (Phase.READY_PREFILL, Phase.DECODING)]
         order = self.policy.order(ready, now)
+        if self.faults is not None:
+            # freeze_decode: the targeted session silently never makes the
+            # batch — DECODING phase, no more DECODE_STEPs (the livelock
+            # signature the obs detectors must catch). Only sessions that
+            # have already stepped qualify for the untargeted latch: a
+            # frozen lane is "stopped decoding", not "never started".
+            order = [s for s in order
+                     if not (s.phase == Phase.DECODING and s.decoded > 0
+                             and self.faults.freezes(s.sid, now))]
         decodes: List[Tuple[Session, int]] = []
         prefills: List[Tuple[Session, int]] = []
         swapins: List[Tuple[Session, int]] = []

@@ -68,13 +68,20 @@ class SimToolExecutor:
         self.bus = bus
         self._leases: Dict[int, CpuLease] = {}    # sid -> in-flight lease
         self._sessions: Dict[int, Session] = {}
+        self.faults = None     # engine.faults.FaultPlan.install wires this
 
     @property
     def cpu_slots(self) -> int:
         return self.pool.cores
 
     def start(self, s: Session, kind: str, duration: float, now: float) -> None:
-        self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind)
+        # expected_s is the *nominal* duration, stamped before any fault
+        # stretch: the obs detectors judge the measured runtime against the
+        # promise the engine was given
+        self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind,
+                      expected_s=duration)
+        if self.faults is not None:
+            duration = self.faults.tool_duration(s.sid, kind, duration, now)
         lease = self.pool.submit(now, duration, sid=s.sid, kind="tool",
                                  tag=kind, priority=1)
         self._leases[s.sid] = lease
@@ -166,7 +173,8 @@ class RealToolExecutor:
         return time.monotonic() - self._t0
 
     def start(self, s: Session, kind: str, duration: float, now: float) -> None:
-        self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind)
+        self.bus.emit(ev.TOOL_ENQUEUE, now, s.sid, kind=kind,
+                      expected_s=duration)
         self.pool.pending_inc()
         t_enq = self._now()
         fn: Optional[Callable] = None

@@ -35,15 +35,28 @@ class Counter:
 
 
 class Gauge:
-    """Last-written instantaneous value."""
+    """Last-written instantaneous value — or, with ``set_fn``, a live
+    view: the callable is re-read at every ``snapshot()``, so sources
+    that already own their counter (e.g. the EventBus ring's ``dropped``)
+    surface without a copy-on-write hook in their hot path."""
 
-    __slots__ = ("value",)
+    __slots__ = ("value", "_fn")
 
     def __init__(self):
         self.value = 0.0
+        self._fn: Optional[Callable[[], float]] = None
 
     def set(self, v: float) -> None:
         self.value = v
+        self._fn = None
+
+    def set_fn(self, fn: Callable[[], float]) -> None:
+        self._fn = fn
+
+    def read(self) -> float:
+        if self._fn is not None:
+            self.value = self._fn()
+        return self.value
 
 
 def log_bounds(lo: float = 1e-4, hi: float = 1e4,
@@ -154,7 +167,7 @@ class MetricsRegistry:
     def snapshot(self) -> dict:
         out: dict = {
             "counters": {k: c.value for k, c in self.counters.items()},
-            "gauges": {k: g.value for k, g in self.gauges.items()},
+            "gauges": {k: g.read() for k, g in self.gauges.items()},
             "histograms": {k: h.snapshot()
                            for k, h in self.histograms.items()},
         }
@@ -220,6 +233,10 @@ def bind_engine_probes(reg: MetricsRegistry, engine) -> None:
     reg.register_probe(
         "events", lambda: {"counts": dict(engine.bus.counts),
                            "dropped": engine.bus.dropped})
+    # the ring's eviction count as a first-class gauge: dashboards alert on
+    # it directly (dropped > 0 voids the exclusive-timeline invariant — see
+    # obs.detect's event_loss incident and trace_report --strict)
+    reg.gauge("events.dropped").set_fn(lambda: float(engine.bus.dropped))
 
 
 def bind_router_probe(reg: MetricsRegistry, router) -> None:

@@ -154,6 +154,12 @@ def export_perfetto(tracers: Union[Tracer, Dict[str, Tracer]],
             "sessions": {rid: t.finished_count
                          for rid, t in tracers.items()},
             "dropped_session_tracks": dropped_sessions,
+            # upstream event loss: nonzero means the source rings evicted
+            # events before assembly and every timeline here is suspect
+            # (trace_report --strict fails on it)
+            "dropped_events": sum(
+                t.bus.dropped for t in tracers.values()
+                if getattr(t, "bus", None) is not None),
         },
     }
     if path is not None:

@@ -186,9 +186,11 @@ class Tracer:
             ev.PROMOTE: self._on_promote,
             ev.PREFIX_HIT: self._on_marker,
             ev.RETENTION: self._on_marker,
+            ev.INCIDENT: self._on_marker,
             ev.FINISH: self._on_finish,
             ev.TICK: self._on_tick,
         }
+        self.bus = bus
         if bus is not None:
             bus.subscribe(None, self.on_event)
 
@@ -434,26 +436,35 @@ class Tracer:
                 for r, sps in sorted(rounds.items())],
         }
 
-    def critical_path(self, sid: int, top: int = 5) -> Optional[dict]:
+    def critical_path(self, sid: int, top: int = 5, *,
+                      allow_unfinished: bool = False) -> Optional[dict]:
         """Exclusive per-plane latency decomposition of a finished session.
 
         Buckets partition ``finished - submitted`` exactly (segments are
         contiguous by construction); ``dominant`` is the single longest
         segment, ``dominant_bucket`` the largest plane total.
+
+        ``allow_unfinished`` decomposes an in-flight session up to its
+        cursor instead of returning None — the flight recorder attributes
+        *stuck* sessions, which by definition have not finished. Such rows
+        carry ``"partial": True`` and ``"finished": None``; the open tail
+        wait past the cursor is not attributed (it has no closing event).
         """
         tr = self.sessions.get(sid)
-        if tr is None or tr.finished is None:
+        if tr is None or (tr.finished is None and not allow_unfinished):
             return None
+        partial = tr.finished is None
+        horizon = tr.cursor if partial else tr.finished
         buckets = dict.fromkeys(PLANES, 0.0)
         by_kind: Dict[str, float] = {}
         for seg in tr.segments:
             buckets[seg.plane] += seg.dur
             by_kind[seg.kind] = by_kind.get(seg.kind, 0.0) + seg.dur
-        e2e = tr.finished - tr.submitted
+        e2e = horizon - tr.submitted
         segs = sorted(tr.segments, key=lambda sp: -sp.dur)
         dom = segs[0] if segs else None
         return {
-            "sid": sid, "e2e": e2e,
+            "sid": sid, "e2e": e2e, "partial": partial,
             "submitted": tr.submitted, "finished": tr.finished,
             "buckets": buckets,
             "bucket_frac": {k: (v / e2e if e2e > 0 else 0.0)
@@ -488,29 +499,50 @@ class Tracer:
 
 # -- raw event (JSONL) round trip -------------------------------------------
 
-def dump_events_jsonl(bus: EventBus, path: str) -> int:
-    """Write the bus log as line-delimited JSON events (one object per
+def write_events_jsonl(events: Iterable[Event], path: str, *,
+                       dropped: int = 0) -> int:
+    """Write an event sequence as line-delimited JSON (one object per
     line: kind/t/sid/data) — the raw-trace format ``scripts/
-    trace_report.py`` replays. Returns the number of lines written."""
-    n = 0
+    trace_report.py`` replays. The first line is a ``trace_meta`` header
+    carrying the upstream ``dropped`` count, so a dump built from a lossy
+    ring announces the loss to every consumer (``trace_report.py
+    --strict`` fails on it). Returns the number of *event* lines written
+    (the header is excluded)."""
+    events = list(events)
     with open(path, "w") as f:
-        for e in bus.log:
+        header = {"kind": ev.TRACE_META, "t": 0.0, "sid": -1,
+                  "data": {"dropped": dropped, "events": len(events)}}
+        f.write(json.dumps(header) + "\n")
+        for e in events:
             f.write(json.dumps({"kind": e.kind, "t": e.t, "sid": e.sid,
                                 "data": e.data}, default=str) + "\n")
-            n += 1
-    return n
+    return len(events)
+
+
+def dump_events_jsonl(bus: EventBus, path: str) -> int:
+    """Dump a bus's retained log (see :func:`write_events_jsonl`); the
+    header's ``dropped`` is the bus ring's eviction count."""
+    return write_events_jsonl(bus.log, path, dropped=bus.dropped)
 
 
 def load_events_jsonl(path: str) -> List[Event]:
+    """Parse a JSONL dump back to events. Tolerant of damage: malformed
+    or truncated lines (a dump cut off mid-write, a corrupted ring
+    bundle) are skipped rather than raised on — ``Tracer.replay`` then
+    degrades to partial timelines, which is exactly what a postmortem
+    wants from a lossy trace."""
     out: List[Event] = []
     with open(path) as f:
         for line in f:
             line = line.strip()
             if not line:
                 continue
-            d = json.loads(line)
-            out.append(Event(d["kind"], float(d["t"]),
-                             int(d.get("sid", -1)), d.get("data") or {}))
+            try:
+                d = json.loads(line)
+                out.append(Event(d["kind"], float(d["t"]),
+                                 int(d.get("sid", -1)), d.get("data") or {}))
+            except (ValueError, KeyError, TypeError):
+                continue
     return out
 
 

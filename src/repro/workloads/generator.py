@@ -101,6 +101,11 @@ class WorkloadSpec:
     # included). None keeps the legacy uniform draw over TOOL_KINDS —
     # byte-identical RNG consumption for existing seeded workloads.
     tool_mix: Optional[Dict[str, float]] = None
+    # SLO class name stamped onto session.meta["slo_class"] (declared in
+    # repro.obs.slo.DEFAULT_SLO_CLASSES or supplied to the SloTracker).
+    # None leaves sessions in the tracker's default class; no RNG draws,
+    # so seeded workloads stay byte-identical.
+    slo_class: Optional[str] = None
 
 
 def _lognormal(rng, mean: float, sigma: float) -> float:
@@ -207,6 +212,8 @@ def generate(spec: WorkloadSpec, cfg: ModelConfig, hw: pm.HardwareSpec,
                       for r in rounds], tp)
         s = make_session(t, rounds, slo_alpha=spec.slo_alpha,
                          ideal_time=ideal)
+        if spec.slo_class is not None:
+            s.meta["slo_class"] = spec.slo_class
         if fid is not None:
             s.meta["family"] = fid
             s.meta["prefix_hashes"] = _chunk_keys(
